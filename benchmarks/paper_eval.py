@@ -1,0 +1,112 @@
+"""Shared machinery for the paper-reproduction benchmarks.
+
+Runs the (app x dataset x reordering x policy) matrix on the scaled
+datasets, caching every simulation in reports/paper_eval.json so repeated
+benchmark invocations are incremental.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import lru_cache
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import cachesim
+from repro.core.reorder import reorder_cost_model, reorder_ranks
+from repro.graph import datasets, traces
+from repro.graph.csr import apply_reorder
+
+CACHE_PATH = os.path.join("reports", "paper_eval.json")
+SCALE = 14           # log2 vertices of the scaled datasets
+APPS = ("bc", "sssp", "pr", "prd", "radii")
+HIGH_SKEW = datasets.HIGH_SKEW
+ADVERSARIAL = datasets.ADVERSARIAL
+
+_cache: Optional[Dict] = None
+
+
+def _load_cache() -> Dict:
+    global _cache
+    if _cache is None:
+        if os.path.exists(CACHE_PATH):
+            with open(CACHE_PATH) as f:
+                _cache = json.load(f)
+        else:
+            _cache = {}
+    return _cache
+
+
+def _save_cache():
+    os.makedirs(os.path.dirname(CACHE_PATH), exist_ok=True)
+    with open(CACHE_PATH, "w") as f:
+        json.dump(_cache, f)
+
+
+@lru_cache(maxsize=64)
+def reordered_graph(ds: str, technique: str, direction: str = "pull"):
+    g = datasets.load(ds, scale=SCALE)
+    if technique == "identity":
+        return g
+    return apply_reorder(g, reorder_ranks(g, technique, direction))
+
+
+@lru_cache(maxsize=64)
+def trace_for(ds: str, app: str, technique: str, llc_mult: float = 1.0,
+              hints: bool = True):
+    g2 = reordered_graph(ds, technique,
+                         traces.APPS[app].direction)
+    llc = int(datasets.scaled_llc_bytes(
+        ds, g2, elem_bytes=traces.APPS[app].elem_bytes) * llc_mult)
+    llc = max(llc, 16 * 1024)
+    tr, plan = traces.generate_trace(g2, app, llc, max_records=1_200_000,
+                                     hints_enabled=hints)
+    return tr, llc
+
+
+def sim(ds: str, app: str, technique: str, policy: str,
+        llc_mult: float = 1.0) -> Dict:
+    """Cached simulation -> dict(miss_rate, hits, accesses, wall_s)."""
+    key = f"{ds}|{app}|{technique}|{policy}|{llc_mult}|s{SCALE}"
+    cache = _load_cache()
+    if key in cache:
+        return cache[key]
+    tr, llc = trace_for(ds, app, technique, llc_mult)
+    t0 = time.time()
+    r = cachesim.simulate(tr, policy, llc)
+    rec = {
+        "miss_rate": r.miss_rate,
+        "hits": int(r.hits),
+        "misses": int(r.misses),
+        "accesses": int(r.accesses),
+        "hits_by_hint": [int(x) for x in r.hits_by_hint],
+        "accesses_by_hint": [int(x) for x in r.accesses_by_hint],
+        "wall_s": round(time.time() - t0, 3),
+    }
+    cache[key] = rec
+    _save_cache()
+    return rec
+
+
+def miss_reduction(base: Dict, other: Dict) -> float:
+    """Fraction of baseline misses eliminated (paper Figs. 5, 11)."""
+    return (base["misses"] - other["misses"]) / max(base["misses"], 1)
+
+
+def speedup(base: Dict, other: Dict, pm: Optional[cachesim.PerfModel] = None) -> float:
+    pm = pm or cachesim.PerfModel()
+
+    def as_res(d, name):
+        return cachesim.SimResult(
+            name, d["accesses"], d["hits"],
+            np.asarray(d["hits_by_hint"]), np.asarray(d["accesses_by_hint"]),
+        )
+
+    return pm.speedup(as_res(base, "base"), as_res(other, "other"))
+
+
+def gmean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.log(np.maximum(xs, 1e-9)).mean()))

@@ -1,0 +1,13 @@
+"""Batched LM serving example: prefill + decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    serve.main(["--arch", "starcoder2-7b", "--requests", "16",
+                "--batch", "8", "--prefill", "64", "--decode", "32"])

@@ -1,0 +1,61 @@
+"""End-to-end LM training driver: a ~10M-param minitron-family model for a
+few hundred steps with checkpointing and an injected failure (restart is
+automatic and bit-exact).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import base as cfgs
+from repro.data import pipeline
+from repro.nn import transformer as tfm
+from repro.train import ft as ft_mod
+from repro.train import optimizer as opt_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fail-at", type=int, default=120)
+    args = ap.parse_args()
+
+    # ~10M-param member of the minitron family (squared-ReLU, GQA)
+    cfg = dataclasses.replace(
+        cfgs.reduced(cfgs.get_arch("minitron-8b")),
+        name="minitron-10m", n_layers=4, d_model=256, n_heads=8, n_kv=4,
+        d_ff=1024, vocab=4096,
+    )
+    n_params = cfg.param_count()
+    print(f"[example] training {cfg.name}: {n_params/1e6:.1f}M params")
+
+    shape = cfgs.LMShape("ex", "train", seq_len=128, global_batch=16)
+    ckpt = tempfile.mkdtemp(prefix="repro_lm_ckpt_")
+
+    trainer = Trainer(
+        loss_fn=lambda p, b: tfm.loss_fn(p, cfg, b),
+        init_params=lambda: tfm.init(jax.random.PRNGKey(0), cfg),
+        opt_cfg=opt_mod.OptConfig(name="adamw", lr=3e-4),
+        tcfg=TrainerConfig(num_steps=args.steps, ckpt_dir=ckpt,
+                           ckpt_every=50, log_every=20),
+    )
+    injector = ft_mod.FailureInjector(fail_at=(args.fail_at,))
+    print(f"[example] failure injected at step {args.fail_at}; "
+          f"checkpoints in {ckpt}")
+    trainer.fit(pipeline.make_batch_fn("lm", cfg, shape, seed=0),
+                injector=injector)
+    losses = [h["loss"] for h in trainer.history]
+    print(f"[example] loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {args.steps} steps (1 restart)")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

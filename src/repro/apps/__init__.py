@@ -1,0 +1,7 @@
+"""Vertex-centric graph applications (paper Table III)."""
+from repro.apps.engine import edge_map_pull, edge_map_push, EngineConfig  # noqa: F401
+from repro.apps.pagerank import pagerank  # noqa: F401
+from repro.apps.prdelta import pagerank_delta  # noqa: F401
+from repro.apps.sssp import sssp  # noqa: F401
+from repro.apps.bc import bc_single_source  # noqa: F401
+from repro.apps.radii import radii_estimate  # noqa: F401

@@ -1,0 +1,64 @@
+"""Betweenness Centrality, Brandes single-root (paper Table III: BC).
+
+Forward: BFS levels with shortest-path counts (sigma). Backward: dependency
+accumulation level by level. Dense frontier masks; levels driven by
+``lax.while_loop`` / ``fori_loop``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import DeviceCSR
+
+
+@partial(jax.jit, static_argnames=("max_levels",))
+def bc_single_source(g_out: DeviceCSR, source: int, max_levels: int = 64):
+    """Returns (dependency scores delta, sigma, level) for one root.
+
+    ``g_out``: out-edge CSR (``dst`` = edge source, ``indices`` = edge
+    target — see engine.edge_map_push conventions).
+    """
+    n = g_out.num_nodes
+    src_e, dst_e = g_out.dst, g_out.indices
+
+    level = jnp.full((n,), -1, jnp.int32).at[source].set(0)
+    sigma = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+
+    def fwd_body(state):
+        level, sigma, frontier, d = state
+        # counts pushed from frontier to unvisited neighbours
+        msg = jnp.where(jnp.take(frontier, src_e), jnp.take(sigma, src_e), 0.0)
+        inc = jax.ops.segment_sum(msg, dst_e, num_segments=n)
+        new = (inc > 0) & (level < 0)
+        level = jnp.where(new, d + 1, level)
+        sigma = sigma + jnp.where(new, inc, 0.0)
+        return level, sigma, new, d + 1
+
+    def fwd_cond(state):
+        _, _, frontier, d = state
+        return frontier.any() & (d < max_levels)
+
+    frontier0 = jnp.zeros((n,), bool).at[source].set(True)
+    level, sigma, _, depth = jax.lax.while_loop(
+        fwd_cond, fwd_body, (level, sigma, frontier0, 0)
+    )
+
+    # Backward dependency accumulation, deepest level first:
+    # delta[v] += sum_{w in succ(v)} sigma[v]/sigma[w] * (1 + delta[w])
+    safe_sigma = jnp.maximum(sigma, 1.0)
+
+    def bwd_body(i, delta):
+        d = depth - i  # current successor level
+        on_level = level == d
+        coef = jnp.where(on_level, (1.0 + delta) / safe_sigma, 0.0)
+        # edge (v=src_e -> w=dst_e) contributes when level[v]==d-1, level[w]==d
+        msg = jnp.where(jnp.take(on_level, dst_e), jnp.take(coef, dst_e), 0.0)
+        back = jax.ops.segment_sum(msg, src_e, num_segments=n)
+        contrib = jnp.where(level == d - 1, back * sigma, 0.0)
+        return delta + contrib
+
+    delta = jax.lax.fori_loop(0, depth, bwd_body, jnp.zeros((n,), jnp.float32))
+    return delta, sigma, level

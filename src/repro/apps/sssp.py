@@ -1,0 +1,48 @@
+"""Single-Source Shortest Path via Bellman-Ford (paper Table III: SSSP).
+
+Push-based (the paper notes SSSP spends its ROI in push iterations): active
+sources relax their out-edges; a vertex joins the next frontier when its
+distance improved.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import DeviceCSR
+
+INF = jnp.float32(jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def sssp(
+    g_out: DeviceCSR,
+    source: int,
+    max_iters: int = 10_000,
+) -> jnp.ndarray:
+    """``g_out`` is the out-edge CSR: ``g_out.dst`` = pushing source of each
+    edge, ``g_out.indices`` = its target (see ``engine.edge_map_push``)."""
+    n = g_out.num_nodes
+    w = g_out.weights if g_out.weights is not None else jnp.ones_like(
+        g_out.indices, dtype=jnp.float32
+    )
+    src_of_edge, dst_of_edge = g_out.dst, g_out.indices
+
+    def body(state):
+        dist, active, it = state
+        cand = jnp.where(jnp.take(active, src_of_edge),
+                         jnp.take(dist, src_of_edge) + w, INF)
+        best = jax.ops.segment_min(cand, dst_of_edge, num_segments=n)
+        improved = best < dist
+        return jnp.minimum(dist, best), improved, it + 1
+
+    def cond(state):
+        _, active, it = state
+        return active.any() & (it < max_iters)
+
+    dist0 = jnp.full((n,), INF).at[source].set(0.0)
+    active0 = jnp.zeros((n,), bool).at[source].set(True)
+    dist, _, _ = jax.lax.while_loop(cond, body, (dist0, active0, 0))
+    return dist

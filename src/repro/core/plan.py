@@ -1,0 +1,102 @@
+"""GraspPlan — the compile-time residency plan (TPU adaptation of the ABRs).
+
+On a TPU there is no transparent LLC; fast-memory residency is a *software*
+decision. ``GraspPlan`` carries exactly the information the paper's ABRs +
+classification logic provide, resolved at plan time:
+
+  * ``hot_size``       number of leading Property-Array elements (after
+                       skew-aware reordering) that fit the fast-memory
+                       budget — the High Reuse Region.
+  * ``moderate_size``  the next budget's worth — the Moderate Reuse Region.
+  * element geometry   so byte bounds can be recovered for the LLC
+                       simulator / trace generator.
+
+The same plan object drives three tiers:
+  1. the Pallas ``hot_gather``/``embedding_bag`` kernels (hot prefix pinned
+     in VMEM, cold streamed from HBM),
+  2. the distributed property exchange (hot prefix replicated across chips,
+     cold partitioned — ``dist/collectives.py``),
+  3. the LLC simulator's hint stream (faithful paper reproduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.regions import GraspRegions, make_regions
+
+# v5e-class geometry. VMEM is the fast-memory tier for the kernel plan; a
+# fraction is reserved for streaming buffers / activations.
+VMEM_BYTES = 128 * 1024 * 1024
+DEFAULT_VMEM_FRACTION = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class GraspPlan:
+    num_elems: int          # Property Array length (vertices / table rows)
+    elem_bytes: int         # bytes per element (after array merging)
+    hot_size: int           # elements in the High Reuse Region
+    moderate_size: int      # elements in the Moderate Reuse Region
+    budget_bytes: int       # fast-memory budget backing hot_size
+    num_arrays: int = 1     # Property Arrays sharing the budget
+
+    @property
+    def enabled(self) -> bool:
+        return self.hot_size > 0
+
+    @property
+    def cold_size(self) -> int:
+        return self.num_elems - self.hot_size
+
+    def regions(self) -> GraspRegions:
+        """Byte-granular region view for the LLC simulator.
+
+        The High Reuse Region covers exactly ``hot_size`` elements, which
+        already embodies the paper's LLC_size / num_arrays division.
+        """
+        return make_regions(
+            [(0, self.num_elems * self.elem_bytes)],
+            llc_bytes=max(self.hot_size * self.elem_bytes, 1),
+        )
+
+    def classify_elem(self, idx: np.ndarray) -> np.ndarray:
+        """0=hot, 1=moderate, 2=cold for element indices (range test)."""
+        idx = np.asarray(idx)
+        return np.where(
+            idx < self.hot_size,
+            0,
+            np.where(idx < self.hot_size + self.moderate_size, 1, 2),
+        ).astype(np.int8)
+
+
+def make_plan(
+    num_elems: int,
+    elem_bytes: int,
+    budget_bytes: Optional[int] = None,
+    num_arrays: int = 1,
+    align: int = 1,
+) -> GraspPlan:
+    """Size the High/Moderate regions from a fast-memory budget.
+
+    ``align`` rounds hot_size down to a multiple (kernels want tile-aligned
+    hot blocks). On no-skew inputs the plan is identical — robustness comes
+    from the *policies* staying flexible, not from disabling the plan
+    (paper Sec. V-B).
+    """
+    if budget_bytes is None:
+        budget_bytes = int(VMEM_BYTES * DEFAULT_VMEM_FRACTION)
+    per_array = budget_bytes // max(num_arrays, 1)
+    hot = min(per_array // elem_bytes, num_elems)
+    if align > 1:
+        hot = (hot // align) * align
+    mod = min(per_array // elem_bytes, num_elems - hot)
+    return GraspPlan(
+        num_elems=int(num_elems),
+        elem_bytes=int(elem_bytes),
+        hot_size=int(hot),
+        moderate_size=int(mod),
+        budget_bytes=int(budget_bytes),
+        num_arrays=int(num_arrays),
+    )

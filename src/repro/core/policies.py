@@ -1,0 +1,509 @@
+"""LLC replacement policies (paper Secs. III-C, IV-C).
+
+Each policy is a pair of pure functions usable inside ``jax.lax.scan``:
+
+    init(cfg)              -> state dict of jnp arrays
+    step(cfg, state, x)    -> (state, hit: bool)
+
+``x`` is one trace record: ``line`` (cache-line id), ``hint`` (2-bit GRASP
+Reuse Hint), ``pc`` (synthetic PC signature), ``region`` (16KB memory
+region id, SHiP-MEM signature), ``nxt`` (time of next access to this line;
+INF if none — used only by OPT and for Hawkeye's Belady training labels),
+``t`` (current time).
+
+Implemented schemes:
+  lru           true LRU (baseline of paper Table VII / Fig. 11)
+  rrip          DRRIP with set dueling (paper's high-performance baseline)
+  rrip_hints    Fig. 7 ablation: RRIP + software hints steer the two RRIP
+                insertion positions
+  grasp_insert  Fig. 7 ablation: GRASP insertion policy only
+  grasp         full GRASP per Table II (insertion + hit-promotion)
+  ship_mem      SHiP-MEM [49]: region-signature hit predictor over RRIP
+  hawkeye       Hawkeye-lite [26]: PC-classifier trained with *exact*
+                Belady labels (favourable to Hawkeye; our reproduction of
+                its failure mode is therefore conservative)
+  leeway        Leeway-lite [10]: PC-indexed live-distance dead-block
+                prediction over the base victim policy
+  pin_X         XMem-style pinning, X% of ways reservable (X=25,50,75,100)
+  opt           Belady's MIN with bypass (offline upper bound)
+
+All RRIP-family policies use a 3-bit RRPV (paper Table II: insert values
+0/6/7, max 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+RRPV_MAX = 7          # 3-bit counter
+RRPV_LONG = 6         # "near LRU" insertion (SRRIP long re-reference)
+INF = jnp.int32(2**31 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheCfg:
+    num_sets: int          # power of two
+    ways: int
+    n_pcs: int = 8
+    n_regions: int = 4096
+    duel_mod: int = 8      # leader-set stride for DRRIP set dueling
+    psel_bits: int = 10
+    brrip_throttle: int = 32   # 1/32 of BRRIP inserts use RRPV_LONG
+    hawkeye_horizon_factor: int = 2  # Belady-label horizon = f*S*W
+
+    @property
+    def set_mask(self) -> int:
+        return self.num_sets - 1
+
+    @property
+    def set_shift(self) -> int:
+        return self.num_sets.bit_length() - 1
+
+    @property
+    def capacity_lines(self) -> int:
+        return self.num_sets * self.ways
+
+
+def _lookup(cfg: CacheCfg, tags, line):
+    s = line & cfg.set_mask
+    tag = line >> cfg.set_shift
+    row = tags[s]
+    hit_vec = row == tag
+    hit = hit_vec.any()
+    hway = jnp.argmax(hit_vec)
+    return s, tag, hit, hway
+
+
+def _rrip_victim(row_rrpv):
+    """Vectorized SRRIP victim: age all ways to put >=1 at RRPV_MAX, pick first."""
+    delta = jnp.maximum(RRPV_MAX - row_rrpv.max(), 0)
+    aged = row_rrpv + delta
+    victim = jnp.argmax(aged == RRPV_MAX)
+    return victim, aged
+
+
+# --------------------------------------------------------------------------
+# LRU
+# --------------------------------------------------------------------------
+def lru_init(cfg: CacheCfg):
+    return dict(
+        tags=jnp.full((cfg.num_sets, cfg.ways), -1, jnp.int32),
+        ts=jnp.full((cfg.num_sets, cfg.ways), -1, jnp.int32),
+    )
+
+
+def lru_step(cfg: CacheCfg, state, x):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    victim = jnp.argmin(state["ts"][s])
+    way = jnp.where(hit, hway, victim)
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(tag),
+            ts=state["ts"].at[s, way].set(x["t"]),
+        ),
+        hit,
+    )
+
+
+# --------------------------------------------------------------------------
+# DRRIP base + the GRASP family (shared machinery, Table II semantics)
+# --------------------------------------------------------------------------
+def _drrip_init(cfg: CacheCfg):
+    return dict(
+        tags=jnp.full((cfg.num_sets, cfg.ways), -1, jnp.int32),
+        rrpv=jnp.full((cfg.num_sets, cfg.ways), RRPV_MAX, jnp.int8),
+        psel=jnp.int32(1 << (cfg.psel_bits - 1)),
+        brrip_cnt=jnp.int32(0),
+    )
+
+
+def _drrip_insert_rrpv(cfg: CacheCfg, state, s):
+    """DRRIP default insertion value for set ``s`` (paper Table II Default)."""
+    sr_leader = (s % cfg.duel_mod) == 0
+    br_leader = (s % cfg.duel_mod) == 1
+    use_brrip = jnp.where(
+        sr_leader,
+        False,
+        jnp.where(br_leader, True, state["psel"] >= (1 << (cfg.psel_bits - 1))),
+    )
+    brrip_val = jnp.where(
+        state["brrip_cnt"] % cfg.brrip_throttle == 0, RRPV_LONG, RRPV_MAX
+    )
+    ins = jnp.where(use_brrip, brrip_val, RRPV_LONG).astype(jnp.int8)
+    return ins, sr_leader, br_leader
+
+
+def _drrip_family_step(cfg: CacheCfg, state, x, insert_fn, hit_fn):
+    """Shared DRRIP skeleton. ``insert_fn(default_ins, hint)->rrpv`` and
+    ``hit_fn(old_rrpv, hint)->rrpv`` specialize the policy (Table II)."""
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    row = state["rrpv"][s]
+
+    default_ins, sr_leader, br_leader = _drrip_insert_rrpv(cfg, state, s)
+    ins = insert_fn(default_ins, x["hint"])
+
+    # miss path
+    victim, aged = _rrip_victim(row)
+    row_miss = aged.at[victim].set(ins)
+    # hit path
+    row_hit = row.at[hway].set(hit_fn(row[hway], x["hint"]))
+
+    way = jnp.where(hit, hway, victim)
+    new_row = jnp.where(hit, row_hit, row_miss)
+    miss = ~hit
+    psel = jnp.clip(
+        state["psel"]
+        + jnp.where(miss & sr_leader, 1, 0)
+        - jnp.where(miss & br_leader, 1, 0),
+        0,
+        (1 << cfg.psel_bits) - 1,
+    )
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(tag),
+            rrpv=state["rrpv"].at[s].set(new_row),
+            psel=psel,
+            brrip_cnt=state["brrip_cnt"] + jnp.where(miss, 1, 0),
+        ),
+        hit,
+    )
+
+
+def rrip_step(cfg, state, x):
+    return _drrip_family_step(
+        cfg,
+        state,
+        x,
+        insert_fn=lambda d, h: d,                      # hints ignored
+        hit_fn=lambda r, h: jnp.int8(0),               # hit promotion to MRU
+    )
+
+
+def rrip_hints_step(cfg, state, x):
+    # Fig. 7 "RRIP+Hints": High-Reuse inserted near LRU (RRPV_LONG), all
+    # other blocks at LRU (RRPV_MAX); hits unchanged from RRIP.
+    return _drrip_family_step(
+        cfg,
+        state,
+        x,
+        insert_fn=lambda d, h: jnp.where(
+            h == 3, d, jnp.where(h == 0, RRPV_LONG, RRPV_MAX)
+        ).astype(jnp.int8),
+        hit_fn=lambda r, h: jnp.int8(0),
+    )
+
+
+def _grasp_insert(default_ins, hint):
+    # Table II insertion: High->0, Moderate->6, Low->7, Default->DRRIP.
+    return jnp.where(
+        hint == 0,
+        0,
+        jnp.where(hint == 1, RRPV_LONG, jnp.where(hint == 2, RRPV_MAX, default_ins)),
+    ).astype(jnp.int8)
+
+
+def grasp_insert_step(cfg, state, x):
+    # Fig. 7 "GRASP (Insertion-Only)": GRASP insertion + RRIP hit policy.
+    return _drrip_family_step(
+        cfg, state, x, insert_fn=_grasp_insert, hit_fn=lambda r, h: jnp.int8(0)
+    )
+
+
+def grasp_step(cfg, state, x):
+    # Full GRASP, Table II: High hit -> MRU; Moderate/Low hit -> gradual
+    # promotion (decrement); Default hit -> MRU (base RRIP behaviour).
+    def hit_fn(r, h):
+        gradual = jnp.maximum(r - 1, 0).astype(jnp.int8)
+        return jnp.where((h == 1) | (h == 2), gradual, jnp.int8(0))
+
+    return _drrip_family_step(cfg, state, x, insert_fn=_grasp_insert, hit_fn=hit_fn)
+
+
+# --------------------------------------------------------------------------
+# SHiP-MEM: region-signature hit predictor (unlimited-entry table, paper IV-C)
+# --------------------------------------------------------------------------
+def ship_init(cfg: CacheCfg):
+    st = _drrip_init(cfg)
+    st.update(
+        shct=jnp.full((cfg.n_regions,), 1, jnp.int8),  # 3-bit, weakly reused
+        sig=jnp.zeros((cfg.num_sets, cfg.ways), jnp.int32),
+        outcome=jnp.zeros((cfg.num_sets, cfg.ways), jnp.bool_),
+    )
+    return st
+
+
+def ship_step(cfg: CacheCfg, state, x):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    row = state["rrpv"][s]
+    victim, aged = _rrip_victim(row)
+
+    shct = state["shct"]
+    # training: on hit mark outcome + strengthen signature of *this* region;
+    # on eviction of a never-reused block, weaken the victim's signature.
+    vic_sig = state["sig"][s, victim]
+    vic_dead = ~state["outcome"][s, victim] & (state["tags"][s, victim] >= 0)
+    shct = shct.at[x["region"]].add(jnp.where(hit, 1, 0))
+    shct = shct.at[vic_sig].add(jnp.where(~hit & vic_dead, -1, 0))
+    shct = jnp.clip(shct, 0, 7)
+
+    # original SHiP insertion semantics: predicted-dead regions insert at
+    # distant RRPV, everything else at the SRRIP long position (SHiP never
+    # inserts at MRU — its win comes from filtering, not protection)
+    ctr = shct[x["region"]]
+    ins = jnp.where(ctr == 0, RRPV_MAX, RRPV_LONG).astype(jnp.int8)
+    row_miss = aged.at[victim].set(ins)
+    row_hit = row.at[hway].set(jnp.int8(0))
+
+    way = jnp.where(hit, hway, victim)
+    new_row = jnp.where(hit, row_hit, row_miss)
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(tag),
+            rrpv=state["rrpv"].at[s].set(new_row),
+            psel=state["psel"],
+            brrip_cnt=state["brrip_cnt"],
+            shct=shct,
+            sig=state["sig"].at[s, way].set(
+                jnp.where(hit, state["sig"][s, hway], x["region"]).astype(jnp.int32)
+            ),
+            outcome=state["outcome"].at[s, way].set(hit),
+        ),
+        hit,
+    )
+
+
+# --------------------------------------------------------------------------
+# Hawkeye-lite: PC classifier trained by Belady labels
+# --------------------------------------------------------------------------
+def hawkeye_init(cfg: CacheCfg):
+    return dict(
+        tags=jnp.full((cfg.num_sets, cfg.ways), -1, jnp.int32),
+        rrpv=jnp.full((cfg.num_sets, cfg.ways), RRPV_MAX, jnp.int8),
+        pctr=jnp.full((cfg.n_pcs,), 4, jnp.int8),  # 3-bit, weakly friendly
+    )
+
+
+def hawkeye_step(cfg: CacheCfg, state, x):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    row = state["rrpv"][s]
+
+    # Belady training label: would OPT have hit this line's next use?
+    horizon = cfg.hawkeye_horizon_factor * cfg.capacity_lines
+    friendly_label = (x["nxt"] - x["t"]) <= horizon
+    pctr = jnp.clip(
+        state["pctr"].at[x["pc"]].add(jnp.where(friendly_label, 1, -1)), 0, 7
+    )
+
+    friendly = state["pctr"][x["pc"]] >= 4
+    ins = jnp.where(friendly, 0, RRPV_MAX).astype(jnp.int8)
+    # Hawkeye pathology reproduced (paper Sec. V-A): a hit whose PC is
+    # predicted cache-averse is *demoted* (eviction priority), not promoted.
+    hit_val = jnp.where(friendly, 0, RRPV_MAX).astype(jnp.int8)
+
+    victim, aged = _rrip_victim(row)
+    row_miss = aged.at[victim].set(ins)
+    row_hit = row.at[hway].set(hit_val)
+
+    way = jnp.where(hit, hway, victim)
+    new_row = jnp.where(hit, row_hit, row_miss)
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(tag),
+            rrpv=state["rrpv"].at[s].set(new_row),
+            pctr=pctr,
+        ),
+        hit,
+    )
+
+
+# --------------------------------------------------------------------------
+# Leeway-lite: PC-indexed live-distance dead-block prediction
+# --------------------------------------------------------------------------
+def leeway_init(cfg: CacheCfg):
+    st = _drrip_init(cfg)  # Leeway rides the same DRRIP base as the baseline
+    st.update(
+        sig=jnp.zeros((cfg.num_sets, cfg.ways), jnp.int32),
+        birth=jnp.zeros((cfg.num_sets, cfg.ways), jnp.int32),
+        last_hit=jnp.zeros((cfg.num_sets, cfg.ways), jnp.int32),
+        acc=jnp.zeros((cfg.num_sets,), jnp.int32),  # per-set access clock
+        ld=jnp.zeros((cfg.n_pcs,), jnp.int32),      # live distance per PC
+    )
+    return st
+
+
+def leeway_step(cfg: CacheCfg, state, x):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    row = state["rrpv"][s]
+    clock = state["acc"][s]
+
+    # dead-block test: set-accesses since last hit exceed the PC's live
+    # distance with a conservative margin (Leeway's variability-aware
+    # policies keep it close to the base scheme when reuse is noisy —
+    # paper Sec. V-A: max slowdown 2.1%).
+    age = clock - state["last_hit"][s]
+    ld_v = state["ld"][state["sig"][s]]
+    dead = (ld_v > 0) & (age > 2 * ld_v + cfg.ways) & (state["tags"][s] >= 0)
+    # predicted-dead blocks are demoted to distant-re-reference and compete
+    # with natural RRPV_MAX candidates (gentler than immediate eviction —
+    # this is what keeps Leeway near the base scheme under variability)
+    row_d = jnp.where(dead, jnp.int8(RRPV_MAX), row)
+    any_dead = dead.any()
+    victim, aged = _rrip_victim(row_d)
+
+    # LD training on eviction: observed live distance of the victim block
+    obs = state["last_hit"][s, victim] - state["birth"][s, victim]
+    vic_sig = state["sig"][s, victim]
+    old_ld = state["ld"][vic_sig]
+    # variability-aware update (Leeway's conservative policy): grow to the
+    # observed max immediately; shrink only on small deviations — a large
+    # downward deviation signals high reuse variance, so keep the old LD.
+    low_var = obs * 2 >= old_ld
+    new_ld = jnp.where(
+        obs > old_ld, obs,
+        jnp.where(low_var, old_ld - (old_ld - obs) // 16, old_ld),
+    )
+    ld = state["ld"].at[vic_sig].set(jnp.where(hit, old_ld, new_ld))
+
+    default_ins, sr_leader, br_leader = _drrip_insert_rrpv(cfg, state, s)
+    row_miss = aged.at[victim].set(default_ins)
+    row_hit = row.at[hway].set(jnp.int8(0))
+    way = jnp.where(hit, hway, victim)
+    new_row = jnp.where(hit, row_hit, row_miss)
+    miss = ~hit
+    psel = jnp.clip(
+        state["psel"]
+        + jnp.where(miss & sr_leader, 1, 0)
+        - jnp.where(miss & br_leader, 1, 0),
+        0,
+        (1 << cfg.psel_bits) - 1,
+    )
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(tag),
+            rrpv=state["rrpv"].at[s].set(new_row),
+            psel=psel,
+            brrip_cnt=state["brrip_cnt"] + jnp.where(miss, 1, 0),
+            sig=state["sig"].at[s, way].set(
+                jnp.where(hit, state["sig"][s, hway], x["pc"]).astype(jnp.int32)
+            ),
+            birth=state["birth"]
+            .at[s, way]
+            .set(jnp.where(hit, state["birth"][s, hway], clock)),
+            last_hit=state["last_hit"].at[s, way].set(clock),
+            acc=state["acc"].at[s].add(1),
+            ld=ld,
+        ),
+        hit,
+    )
+
+
+# --------------------------------------------------------------------------
+# XMem-style pinning (PIN-X), driven by the GRASP High-Reuse classification
+# --------------------------------------------------------------------------
+def _pin_init(cfg: CacheCfg):
+    st = _drrip_init(cfg)
+    st["pinned"] = jnp.zeros((cfg.num_sets, cfg.ways), jnp.bool_)
+    return st
+
+
+def _pin_step(cfg: CacheCfg, state, x, quota_ways: int):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    row = state["rrpv"][s]
+    pinned_row = state["pinned"][s]
+
+    default_ins, sr_leader, br_leader = _drrip_insert_rrpv(cfg, state, s)
+
+    # victim among unpinned ways only (pinned blocks cannot be evicted)
+    masked = jnp.where(pinned_row, jnp.int8(-1), row)
+    have_unpinned = (~pinned_row).any()
+    delta = jnp.maximum(RRPV_MAX - masked.max(), 0)
+    aged = jnp.where(pinned_row, row, row + delta)
+    victim = jnp.argmax(jnp.where(pinned_row, jnp.int8(-1), aged) == RRPV_MAX)
+
+    want_pin = (x["hint"] == 0) & (pinned_row.sum() < quota_ways)
+    bypass = ~hit & ~have_unpinned  # fully pinned set: cannot insert
+
+    ins = jnp.where(want_pin, 0, default_ins).astype(jnp.int8)
+    row_miss = aged.at[victim].set(ins)
+    row_hit = row.at[hway].set(jnp.int8(0))
+
+    way = jnp.where(hit, hway, victim)
+    new_row = jnp.where(hit, row_hit, jnp.where(bypass, row, row_miss))
+    new_tag_val = jnp.where(bypass & ~hit, state["tags"][s, way], tag)
+    pin_new = jnp.where(
+        hit,
+        pinned_row,  # pin status persists across hits
+        jnp.where(
+            bypass, pinned_row, pinned_row.at[victim].set(want_pin)
+        ),
+    )
+    miss = ~hit
+    psel = jnp.clip(
+        state["psel"]
+        + jnp.where(miss & sr_leader, 1, 0)
+        - jnp.where(miss & br_leader, 1, 0),
+        0,
+        (1 << cfg.psel_bits) - 1,
+    )
+    return (
+        dict(
+            tags=state["tags"].at[s, way].set(new_tag_val),
+            rrpv=state["rrpv"].at[s].set(new_row),
+            psel=psel,
+            brrip_cnt=state["brrip_cnt"] + jnp.where(miss, 1, 0),
+            pinned=state["pinned"].at[s].set(pin_new),
+        ),
+        hit,
+    )
+
+
+# --------------------------------------------------------------------------
+# Belady OPT with bypass
+# --------------------------------------------------------------------------
+def opt_init(cfg: CacheCfg):
+    return dict(
+        tags=jnp.full((cfg.num_sets, cfg.ways), -1, jnp.int32),
+        nxt=jnp.full((cfg.num_sets, cfg.ways), INF, jnp.int32),
+    )
+
+
+def opt_step(cfg: CacheCfg, state, x):
+    s, tag, hit, hway = _lookup(cfg, state["tags"], x["line"])
+    nrow = state["nxt"][s]
+    victim = jnp.argmax(nrow)
+    bypass = ~hit & (x["nxt"] >= nrow.max())
+    way = jnp.where(hit, hway, victim)
+    do_write = hit | ~bypass
+    tags = state["tags"].at[s, way].set(
+        jnp.where(do_write, tag, state["tags"][s, way])
+    )
+    nxt = state["nxt"].at[s, way].set(
+        jnp.where(do_write, x["nxt"], state["nxt"][s, way])
+    )
+    return dict(tags=tags, nxt=nxt), hit
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+POLICIES: Dict[str, Tuple[Callable, Callable]] = {
+    "lru": (lru_init, lru_step),
+    "rrip": (_drrip_init, rrip_step),
+    "rrip_hints": (_drrip_init, rrip_hints_step),
+    "grasp_insert": (_drrip_init, grasp_insert_step),
+    "grasp": (_drrip_init, grasp_step),
+    "ship_mem": (ship_init, ship_step),
+    "hawkeye": (hawkeye_init, hawkeye_step),
+    "leeway": (leeway_init, leeway_step),
+    "opt": (opt_init, opt_step),
+}
+
+for _x in (25, 50, 75, 100):
+    def _mk(xval):
+        def step(cfg, state, x):
+            quota = max(1, round(cfg.ways * xval / 100))
+            return _pin_step(cfg, state, x, quota)
+        return step
+    POLICIES[f"pin_{_x}"] = (_pin_init, _mk(_x))

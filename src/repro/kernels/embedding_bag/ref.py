@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the hot-cached embedding bag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lookup_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """(V, d) table, (B,) ids -> (B, d)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def bag_ref(table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """EmbeddingBag(sum): (V,d) table, (B,H) ids + mask -> (B,d).
+
+    JAX has no native EmbeddingBag; this gather + masked-sum is the
+    reference semantics (torch ``nn.EmbeddingBag(mode='sum')``)."""
+    rows = jnp.take(table, ids, axis=0)          # (B, H, d)
+    return jnp.where(mask[..., None], rows, 0.0).sum(axis=1)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: VMEM-pinned hot-region gather (GRASP, kernel tier).
+
+The High Reuse Region (first ``hot_size`` rows of the DBG-reordered
+Property Array) is mapped as a VMEM block whose index_map is constant —
+the block is loaded from HBM once and stays resident across the whole grid
+(the TPU-native analogue of "protected from thrashing"). Each grid step
+gathers one tile of edge indices against the pinned table; indices outside
+the hot region produce zeros and are fixed up by the cold path in ops.py.
+
+TPU mapping notes:
+  * d (feature width) is padded to a multiple of 128 (lane dim) by ops.py.
+  * the row gather inside VMEM lowers to a vector gather on Mosaic
+    (validated here with interpret=True on CPU; TPU is the target).
+  * VMEM budget: hot_size*d*4B + tile buffers must fit ~16MB/core of
+    usable VMEM per the GraspPlan (plan.budget_bytes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hot_gather_kernel(idx_ref, hot_ref, out_ref, *, hot_size: int):
+    idx = idx_ref[...]                                   # (tile_e,) int32
+    safe = jnp.clip(idx, 0, hot_size - 1)
+    rows = jnp.take(hot_ref[...], safe, axis=0)          # VMEM vector gather
+    hit = (idx >= 0) & (idx < hot_size)
+    out_ref[...] = jnp.where(hit[:, None], rows, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_e", "interpret"))
+def hot_gather_hot_part(
+    hot_table: jnp.ndarray,   # (H, d) — the pinned High Reuse Region
+    idx: jnp.ndarray,         # (E,) int32, full index stream (hot + cold)
+    tile_e: int = 2048,
+    interpret: bool = True,   # CPU container: interpret; TPU: False
+) -> jnp.ndarray:
+    h, d = hot_table.shape
+    e = idx.shape[0]
+    assert e % tile_e == 0, f"E={e} must be divisible by tile_e={tile_e}"
+    grid = (e // tile_e,)
+    return pl.pallas_call(
+        functools.partial(_hot_gather_kernel, hot_size=h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),      # index tile
+            pl.BlockSpec((h, d), lambda i: (0, 0)),       # pinned hot block
+        ],
+        out_specs=pl.BlockSpec((tile_e, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, d), hot_table.dtype),
+        interpret=interpret,
+    )(idx, hot_table)
+
+
+def _gather_seg_kernel(idx_ref, seg_ref, hot_ref, out_ref, *, hot_size: int,
+                       seg_per_tile: int):
+    """Fused gather + local segment-sum: edges are CSR-ordered, so each edge
+    tile touches a bounded contiguous destination range handled as a local
+    one-hot matmul (MXU-friendly) accumulated into the output tile."""
+    i = pl.program_id(0)
+    idx = idx_ref[...]
+    seg = seg_ref[...]
+    safe = jnp.clip(idx, 0, hot_size - 1)
+    rows = jnp.take(hot_ref[...], safe, axis=0)
+    hit = (idx >= 0) & (idx < hot_size)
+    rows = jnp.where(hit[:, None], rows, 0.0)
+    local_seg = seg - i * seg_per_tile
+    onehot = (local_seg[None, :] == jnp.arange(seg_per_tile)[:, None]).astype(
+        rows.dtype
+    )
+    out_ref[...] = jnp.dot(onehot, rows, preferred_element_type=jnp.float32).astype(
+        out_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "tile_e", "seg_per_tile", "interpret")
+)
+def hot_gather_segment_sum(
+    hot_table: jnp.ndarray,
+    idx: jnp.ndarray,
+    seg: jnp.ndarray,          # (E,) destination of each edge, sorted asc.
+    num_segments: int,
+    tile_e: int = 2048,
+    seg_per_tile: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused hot gather + segment-sum. Requires an aligned edge layout where
+    tile i only holds edges with seg in [i*seg_per_tile, (i+1)*seg_per_tile)
+    (built by ops.build_aligned_edges — padding with idx=-1)."""
+    h, d = hot_table.shape
+    e = idx.shape[0]
+    grid = (e // tile_e,)
+    assert grid[0] * seg_per_tile == num_segments
+    return pl.pallas_call(
+        functools.partial(
+            _gather_seg_kernel, hot_size=h, seg_per_tile=seg_per_tile
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),       # pinned hot block
+        ],
+        out_specs=pl.BlockSpec((seg_per_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(idx, seg, hot_table)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the two-tier hot gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_ref(prop: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """(N, d) table, (E,) indices -> (E, d). The semantics the fused
+    hot/cold path must reproduce exactly."""
+    return jnp.take(prop, idx, axis=0)
+
+
+def gather_segment_sum_ref(
+    prop: jnp.ndarray, idx: jnp.ndarray, seg: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """Fused gather + destination segment-sum (the pull-engine hot path)."""
+    import jax
+
+    return jax.ops.segment_sum(jnp.take(prop, idx, axis=0), seg, num_segments)

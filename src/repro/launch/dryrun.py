@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, prove memory fits, extract roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --cells all
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  --cells lm
+
+Results land in reports/dryrun_<mesh>.json (one record per cell: status,
+bytes per device, HLO flops/bytes, collective bytes by op, roofline terms).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import base as cfgs
+from repro.dist import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
+    cell = steps_mod.build_cell(arch, shape_name, mesh)
+    cfg = cfgs.get_arch(arch)
+    shape = cfgs.SHAPES[cfg.family][shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        shd.set_active_mesh(mesh)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.step_fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate,
+            )
+            lowered = jitted.lower(*cell.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        bytes_per_dev = None
+        if mem is not None:
+            bytes_per_dev = (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            )
+        analytic = None
+        loop_trips = ()
+        if cfg.family == "lm":
+            # XLA counts scan bodies once: LM compute/memory terms come from
+            # the analytic model; collectives get while-depth trip scaling
+            # (microbatch+layer scans, then the attention kv-chunk scan).
+            inner = max(shape.seq_len // 1024, 1)
+            mbs = max(min(cfg.microbatches,
+                          shape.global_batch
+                          // (mesh.size // mesh.shape["model"])), 1)
+            # nesting: [microbatch scan] -> [group scan ->] layer scan
+            #          -> kv-chunk scan
+            groups = getattr(cfg, "layer_groups", 1)
+            layer_levels = ((groups, cfg.n_layers // groups)
+                            if groups > 1 else (cfg.n_layers,))
+            if shape.kind == "train" and mbs > 1:
+                loop_trips = (mbs,) + layer_levels + (inner,)
+            else:
+                loop_trips = layer_levels + (inner,)
+            analytic = rl.analytic_lm_terms(
+                cfg, shape, mesh.size, n_model=mesh.shape["model"]
+            )
+        roof = rl.analyze(
+            arch, shape_name, mesh_name, mesh.size, cost, hlo,
+            model_flops=rl.model_flops_for(cfg, shape),
+            memory_bytes=bytes_per_dev,
+            loop_trips=loop_trips, analytic=analytic,
+        )
+        rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+                   **roof.row())
+        print(f"[dryrun] OK  {arch:24s} {shape_name:14s} {mesh_name:6s} "
+              f"compile={rec['compile_s']:6.1f}s dominant={roof.dominant:10s} "
+              f"bytes/dev={bytes_per_dev and bytes_per_dev/1e9:.2f}GB "
+              f"flops/dev={roof.hlo_gflops:.1f}G coll={roof.coll_gbytes:.2f}GB")
+    except Exception as e:  # noqa: BLE001 — report, don't abort the sweep
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 1))
+        print(f"[dryrun] FAIL {arch} {shape_name} {mesh_name}: {rec['error']}")
+    finally:
+        shd.set_active_mesh(None)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--cells", default="all",
+                    help="'all' | family (lm|gnn|recsys) | 'arch:shape[,arch:shape...]'")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = steps_mod.all_cells()
+    if args.cells != "all":
+        if args.cells in ("lm", "gnn", "recsys"):
+            cells = [
+                (a, s) for a, s in cells
+                if cfgs.get_arch(a).family == args.cells
+            ]
+        else:
+            want = [tuple(c.split(":")) for c in args.cells.split(",")]
+            cells = [c for c in cells if c in want]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    os.makedirs("reports", exist_ok=True)
+    records = []
+    for mesh_name, mesh in meshes:
+        for arch, shape_name in cells:
+            records.append(run_cell(arch, shape_name, mesh, mesh_name))
+            out = args.out or f"reports/dryrun_{args.mesh}.json"
+            with open(out, "w") as f:  # checkpoint after every cell
+                json.dump(records, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    print(f"[dryrun] {n_ok}/{len(records)} cells compiled")
+    return 0 if n_ok == len(records) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

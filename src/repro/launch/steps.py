@@ -1,0 +1,503 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``build_cell(arch_name, shape_name, mesh)`` returns a :class:`Cell` with the
+jitted-able step function, abstract arguments (ShapeDtypeStructs — no
+allocation) and in/out shardings: everything dryrun/train/serve need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgs
+from repro.dist import sharding as shd
+from repro.nn import gnn as gnn_mod
+from repro.nn import recsys as recsys_mod
+from repro.nn import transformer as tfm
+from repro.train import optimizer as opt_mod
+
+F32, BF16, I32, BOOL = jnp.float32, jnp.bfloat16, jnp.int32, jnp.bool_
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args: Tuple[Any, ...]          # abstract (ShapeDtypeStruct) pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    notes: str = ""
+    donate: Tuple[int, ...] = ()
+
+
+def _named(mesh, spec_tree, value_tree):
+    """PartitionSpec pytree -> NamedSharding pytree matching value tree."""
+    def to_ns(spec):
+        return shd.ns(mesh, *spec)
+
+    specs = jax.tree_util.tree_map(
+        to_ns, spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    # broadcast spec tree onto value tree (layers dict shared across L)
+    flat_v, tree_v = jax.tree_util.tree_flatten(value_tree)
+    flat_s = tree_v.flatten_up_to(_broadcast_like(specs, value_tree))
+    return jax.tree_util.tree_unflatten(tree_v, flat_s)
+
+
+def _broadcast_like(spec_tree, value_tree):
+    """specs may be shallower than values (e.g. one P for a whole subtree)."""
+    if isinstance(spec_tree, NamedSharding):
+        return jax.tree_util.tree_map(lambda _: spec_tree, value_tree)
+    if isinstance(spec_tree, dict):
+        return {
+            k: _broadcast_like(spec_tree[k], value_tree[k]) for k in value_tree
+        }
+    if isinstance(spec_tree, (list, tuple)):
+        return type(spec_tree)(
+            _broadcast_like(s, v) for s, v in zip(spec_tree, value_tree)
+        )
+    return spec_tree
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_abstract_params(cfg, dtype=None):
+    p = jax.eval_shape(partial(tfm.init, cfg=cfg), sds((2,), jnp.uint32))
+    if dtype is not None:  # serving checkpoints are bf16
+        p = jax.tree_util.tree_map(
+            lambda s: sds(s.shape, dtype) if s.dtype == jnp.float32 else s, p
+        )
+    return p
+
+
+def _serving_fsdp(cfg, mesh) -> bool:
+    """Serving wants TP-only weights (no per-layer data-axis re-gather) —
+    unless the bf16 weights don't fit a chip's HBM at TP-only sharding
+    (nemotron-340b: 42.6GB/chip > 16GB -> keep 2D sharding)."""
+    tp_bytes = cfg.param_count() * 2 / mesh.shape["model"]
+    return tp_bytes > 8e9
+
+
+def _lm_train_cell(cfg, shape, mesh) -> Cell:
+    opt_cfg = opt_mod.for_arch(cfg)
+    opt_init, opt_update = opt_mod.make(opt_cfg)
+    # each microbatch must still cover every batch shard
+    batch_shards = 1
+    for a in shd.batch_axes(mesh):
+        batch_shards *= mesh.shape[a]
+    mb = max(min(cfg.microbatches, shape.global_batch // batch_shards), 1)
+    assert shape.global_batch % mb == 0
+    baxes = shd.batch_axes(mesh)
+
+    def train_step(params, opt_state, batch):
+        if mb == 1:
+            loss, grads = jax.value_and_grad(tfm.loss_fn)(params, cfg, batch)
+        else:
+            # gradient accumulation: peak activation stash = one microbatch
+            split = jax.tree_util.tree_map(
+                lambda x: shd.constrain(
+                    x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                    None, baxes, *(None,) * (x.ndim - 1),
+                ),
+                batch,
+            )
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(tfm.loss_fn)(params, cfg, mbatch)
+                return (
+                    jax.tree_util.tree_map(jnp.add, g_acc, g),
+                    l_acc + l,
+                ), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zeros, 0.0), split)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        new_params, new_state = opt_update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    a_params = _lm_abstract_params(cfg)
+    a_opt = jax.eval_shape(opt_init, a_params)
+    a_batch = {
+        "tokens": sds((shape.global_batch, shape.seq_len), I32),
+        "labels": sds((shape.global_batch, shape.seq_len), I32),
+    }
+    pspec = shd.lm_param_spec(cfg)
+    p_shard = _named(mesh, pspec, a_params)
+    o_shard = _named(mesh, shd.opt_state_spec(pspec, opt_cfg.name), a_opt)
+    b_shard = _named(mesh, shd.lm_batch_spec(mesh), a_batch)
+    scalar = shd.ns(mesh)
+    return Cell(
+        arch=cfg.name, shape=shape.name, step_fn=train_step,
+        args=(a_params, a_opt, a_batch),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, {"loss": scalar}),
+        donate=(0, 1),
+    )
+
+
+def _lm_prefill_cell(cfg, shape, mesh) -> Cell:
+    # (perf log: seq-sharding prefill activations was tried and REFUTED —
+    # it 10x'd collective bytes; head-TP with repeated-KV einsums wins for
+    # prefill. See EXPERIMENTS.md §Perf.)
+    def prefill_step(params, tokens):
+        return tfm.prefill(params, cfg, tokens)
+
+    a_params = _lm_abstract_params(cfg, dtype=BF16)
+    a_tokens = sds((shape.global_batch, shape.seq_len), I32)
+    # serving: no optimizer state -> weights fit TP-only; FSDP sharding
+    # would re-gather weights over data every layer (perf iteration log,
+    # EXPERIMENTS.md §Perf-serving)
+    pspec = shd.lm_param_spec(cfg, fsdp=_serving_fsdp(cfg, mesh))
+    b = shd.batch_axes(mesh)
+    p_shard = _named(mesh, pspec, a_params)
+    # output cache: batch over data axes, sequence over model (serving
+    # layout; nemotron-class caches exceed HBM on batch sharding alone)
+    cache_shard = tfm.KVCache(
+        k=shd.ns(mesh, None, b, "model", None, None),
+        v=shd.ns(mesh, None, b, "model", None, None),
+        length=shd.ns(mesh),
+    )
+    return Cell(
+        arch=cfg.name, shape=shape.name, step_fn=prefill_step,
+        args=(a_params, a_tokens),
+        in_shardings=(p_shard, shd.ns(mesh, b, None)),
+        out_shardings=(shd.ns(mesh, b, None), cache_shard),
+    )
+
+
+def _lm_decode_cell(cfg, shape, mesh) -> Cell:
+    """decode_32k: KV cache sharded on batch. long_500k (batch=1): KV cache
+    sharded on *sequence* across (data, model) — FlashDecoding-style; the
+    partial-softmax combine lowers to the psum GSPMD inserts for the
+    softmax/attention reductions over the sharded axis."""
+    long_context = shape.global_batch == 1
+
+    def decode_step(params, cache, token):
+        return tfm.decode_step(params, cfg, cache, token)
+
+    a_params = _lm_abstract_params(cfg, dtype=BF16)
+    a_cache = tfm.KVCache(
+        k=sds((cfg.n_layers, shape.global_batch, shape.seq_len, cfg.n_kv,
+               cfg.head_dim), BF16),
+        v=sds((cfg.n_layers, shape.global_batch, shape.seq_len, cfg.n_kv,
+               cfg.head_dim), BF16),
+        length=sds((), I32),
+    )
+    a_token = sds((shape.global_batch,), I32)
+    pspec = shd.lm_param_spec(cfg, fsdp=_serving_fsdp(cfg, mesh))
+    p_shard = _named(mesh, pspec, a_params)
+    b = shd.batch_axes(mesh)
+    if long_context:
+        seq_axes = tuple(mesh.axis_names)  # all axes onto the KV sequence
+        kv_spec = shd.ns(mesh, None, None, seq_axes, None, None)
+        tok_spec = shd.ns(mesh)
+    else:
+        # batch over data axes + KV sequence over model (flash-decoding)
+        kv_spec = shd.ns(mesh, None, b, "model", None, None)
+        tok_spec = shd.ns(mesh, b)
+    cache_shard = tfm.KVCache(k=kv_spec, v=kv_spec, length=shd.ns(mesh))
+    return Cell(
+        arch=cfg.name, shape=shape.name, step_fn=decode_step,
+        args=(a_params, a_cache, a_token),
+        in_shardings=(p_shard, cache_shard, tok_spec),
+        out_shardings=(
+            shd.ns(mesh, b if not long_context else None, None),
+            cache_shard,
+        ),
+        notes="flash-decoding seq-sharded KV" if long_context else "",
+        donate=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+N_CLASSES = 47  # ogbn-products label count
+
+
+def _gnn_loss(params, cfg, batch):
+    if cfg.kind in ("gin", "pna"):
+        logits = gnn_mod.apply(params, cfg, batch)
+        labels = batch["labels"]
+        if "seeds" in batch:  # minibatch: loss on seed nodes only
+            logits = jnp.take(logits, batch["seeds"], axis=0)
+        elif "graph_id" in batch:  # molecule: graph classification readout
+            n_graphs = labels.shape[0]
+            logits = jax.ops.segment_sum(logits, batch["graph_id"], n_graphs)
+        logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return -ll.mean()
+    if cfg.kind == "egnn":
+        h, coords = gnn_mod.apply(params, cfg, batch)
+        energy = h.sum(axis=-1)
+        return _energy_loss(energy, batch)
+    if cfg.kind == "nequip":
+        energy = gnn_mod.apply(params, cfg, batch)
+        return _energy_loss(energy, batch)
+    raise ValueError(cfg.kind)
+
+
+def _energy_loss(energy, batch):
+    if "graph_id" in batch:  # molecule: per-graph energy regression
+        n_graphs = batch["labels"].shape[0]
+        e_graph = jax.ops.segment_sum(energy, batch["graph_id"], n_graphs)
+        return jnp.mean((e_graph - batch["labels"]) ** 2)
+    return jnp.mean(energy**2) * 1e-3  # full-graph: bounded synthetic target
+
+
+def _pad_to(n: int, mult: int = 512) -> int:
+    """Shardability padding: edge/candidate streams are padded to a multiple
+    of the largest mesh size (512); emask/sentinel entries absorb the pad."""
+    return (n + mult - 1) // mult * mult
+
+
+def _gnn_batch_abstract(cfg, shape) -> dict:
+    if shape.kind == "full_graph":
+        n, e = shape.n_nodes, _pad_to(shape.n_edges)
+        b = {
+            "x": sds((n, shape.d_feat), F32),
+            "src": sds((e,), I32),
+            "dst": sds((e,), I32),
+            "emask": sds((e,), BOOL),
+            "labels": sds((n,), I32),
+            "coords": sds((n, 3), F32),
+            "species": sds((n,), I32),
+        }
+    elif shape.kind == "minibatch":
+        from repro.graph.sampler import subgraph_shape
+
+        n_sub, e_sub = subgraph_shape(shape.batch_nodes, tuple(shape.fanout))
+        b = {
+            "x": sds((n_sub, shape.d_feat), F32),
+            "src": sds((e_sub,), I32),
+            "dst": sds((e_sub,), I32),
+            "emask": sds((e_sub,), BOOL),
+            "labels": sds((shape.batch_nodes,), I32),
+            "seeds": sds((shape.batch_nodes,), I32),
+            "coords": sds((n_sub, 3), F32),
+            "species": sds((n_sub,), I32),
+        }
+    elif shape.kind == "molecule":
+        nn_ = shape.batch_graphs * shape.n_nodes
+        ee = shape.batch_graphs * shape.n_edges
+        b = {
+            "x": sds((nn_, shape.d_feat), F32),
+            "src": sds((ee,), I32),
+            "dst": sds((ee,), I32),
+            "emask": sds((ee,), BOOL),
+            "coords": sds((nn_, 3), F32),
+            "species": sds((nn_,), I32),
+            "graph_id": sds((nn_,), I32),
+            # gin/pna: graph classification (int); egnn/nequip: energy (f32)
+            "labels": sds(
+                (shape.batch_graphs,),
+                I32 if cfg.kind in ("gin", "pna") else F32,
+            ),
+        }
+    else:
+        raise ValueError(shape.kind)
+    return b
+
+
+def _gnn_grasp_cell(cfg, shape, mesh) -> Cell:
+    """GRASP-sharded full-graph GIN (dist/collectives.py): hot prefix
+    replicated, cold partitioned, bounded halo all-gather per layer —
+    the paper's technique as the distributed exchange (hillclimb cell)."""
+    from repro.dist import collectives as coll
+
+    opt_cfg = opt_mod.OptConfig(name="adamw", lr=1e-3)
+    opt_init, opt_update = opt_mod.make(opt_cfg)
+    spec = coll.partition_spec_for(
+        shape.n_nodes, shape.n_edges, mesh.size, hot=1 << 18
+    )
+    step, batch_specs = coll.make_grasp_gin_step(
+        spec, cfg, shape.d_feat, N_CLASSES, mesh, opt_update
+    )
+    a_params = jax.eval_shape(
+        partial(gnn_mod.init, cfg=cfg, d_feat=shape.d_feat),
+        sds((2,), jnp.uint32),
+    )
+    a_opt = jax.eval_shape(opt_init, a_params)
+    p_dev = spec.num_devices
+    a_batch = {
+        "x_hot": sds((spec.hot, shape.d_feat), F32),
+        "x_cold": sds((p_dev, spec.cold_per_dev, shape.d_feat), F32),
+        "esrc": sds((p_dev, spec.e_loc), I32),
+        "edst": sds((p_dev, spec.e_loc), I32),
+        "emask": sds((p_dev, spec.e_loc), BOOL),
+        "pub": sds((p_dev, spec.c_pub), I32),
+        "labels": sds((p_dev, spec.n_own), I32),
+    }
+    p_shard = jax.tree_util.tree_map(lambda _: shd.ns(mesh), a_params)
+    o_shard = jax.tree_util.tree_map(lambda _: shd.ns(mesh), a_opt)
+    b_shard = {k: shd.ns(mesh, *batch_specs[k]) for k in a_batch}
+    return Cell(
+        arch=cfg.name, shape=shape.name, step_fn=step,
+        args=(a_params, a_opt, a_batch),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, {"loss": shd.ns(mesh)}),
+        donate=(0, 1),
+        notes=f"grasp exchange hot={spec.hot} c_pub={spec.c_pub}",
+    )
+
+
+def _gnn_train_cell(cfg, shape, mesh) -> Cell:
+    if cfg.kind == "gin" and cfg.grasp and shape.name == "ogb_products":
+        return _gnn_grasp_cell(cfg, shape, mesh)
+    opt_cfg = opt_mod.OptConfig(name="adamw", lr=1e-3)
+    opt_init, opt_update = opt_mod.make(opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(_gnn_loss)(params, cfg, batch)
+        new_params, new_state = opt_update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    d_feat = shape.d_feat
+    a_params = jax.eval_shape(
+        partial(gnn_mod.init, cfg=cfg, d_feat=d_feat), sds((2,), jnp.uint32)
+    )
+    a_batch = _gnn_batch_abstract(cfg, shape)
+    a_opt = jax.eval_shape(opt_init, a_params)
+
+    p_shard = jax.tree_util.tree_map(lambda _: shd.ns(mesh), a_params)
+    o_shard = jax.tree_util.tree_map(lambda _: shd.ns(mesh), a_opt)
+    bspec = shd.gnn_batch_spec(mesh, shape.kind)
+    b_shard = {k: shd.ns(mesh, *bspec[k]) if k in bspec else shd.ns(mesh)
+               for k in a_batch}
+    return Cell(
+        arch=cfg.name, shape=shape.name, step_fn=train_step,
+        args=(a_params, a_opt, a_batch),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, {"loss": shd.ns(mesh)}),
+        donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+def grasp_hot_rows(cfg, mesh) -> int:
+    """GRASP plan for the item table: hot prefix sized by the per-chip
+    fast-memory budget (replication cost) and shardability of the tail."""
+    if not cfg.grasp:
+        return 0
+    budget_rows = (64 << 20) // (cfg.embed_dim * 4)  # 64MB replica budget
+    hot = 1 << (budget_rows.bit_length() - 1)
+    # cold remainder must shard over 512 chips
+    while hot > 0 and (cfg.n_items - hot) % 512 != 0:
+        hot //= 2
+    return hot
+
+
+def _recsys_cell(cfg, shape, mesh) -> Cell:
+    opt_cfg = opt_mod.OptConfig(name="adamw", lr=1e-3)
+    opt_init, opt_update = opt_mod.make(opt_cfg)
+
+    # Perf log (§Perf-mind): hot/cold table replication wins ONLY for
+    # retrieval-style scoring (-47% collective); for dense-batch train /
+    # serve lookups GSPMD's output-psum gather is already optimal and the
+    # compacted cold path regresses (refuted) — so the GRASP layout is
+    # applied to the retrieval cell only.
+    hot_rows = grasp_hot_rows(cfg, mesh) if shape.kind == "retrieval" else 0
+    a_params = jax.eval_shape(
+        partial(recsys_mod.init, cfg=cfg, hot_rows=hot_rows),
+        sds((2,), jnp.uint32),
+    )
+    pspec = shd.recsys_param_spec(cfg, grasp=hot_rows > 0)
+    p_shard = _named(mesh, pspec, a_params)
+    b = shd.batch_axes(mesh)
+    hl = cfg.hist_len
+
+    if shape.kind == "train":
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(recsys_mod.loss_fn)(
+                params, cfg, batch
+            )
+            new_params, new_state = opt_update(grads, opt_state, params)
+            return new_params, new_state, {"loss": loss}
+
+        a_opt = jax.eval_shape(opt_init, a_params)
+        o_shard = _named(mesh, shd.opt_state_spec(pspec, "adamw"), a_opt)
+        a_batch = {
+            "hist": sds((shape.batch, hl), I32),
+            "hist_mask": sds((shape.batch, hl), BOOL),
+            "target": sds((shape.batch,), I32),
+            "negatives": sds((cfg.n_negatives,), I32),
+        }
+        b_shard = _named(mesh, shd.recsys_batch_spec(mesh, "train"), a_batch)
+        return Cell(cfg.name, shape.name, step, (a_params, a_opt, a_batch),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, {"loss": shd.ns(mesh)}),
+                    donate=(0, 1))
+
+    if shape.kind == "serve":
+        def step(params, batch):
+            return recsys_mod.serve_scores(params, cfg, batch)
+
+        a_batch = {
+            "hist": sds((shape.batch, hl), I32),
+            "hist_mask": sds((shape.batch, hl), BOOL),
+            "candidates": sds((shape.batch, 64), I32),
+        }
+        b_shard = _named(mesh, shd.recsys_batch_spec(mesh, "serve"), a_batch)
+        return Cell(cfg.name, shape.name, step, (a_params, a_batch),
+                    (p_shard, b_shard), shd.ns(mesh, b, None))
+
+    if shape.kind == "retrieval":
+        def step(params, batch):
+            return recsys_mod.retrieval_scores(params, cfg, batch)
+
+        a_batch = {
+            "hist": sds((1, hl), I32),
+            "hist_mask": sds((1, hl), BOOL),
+            "candidates": sds((_pad_to(shape.n_candidates),), I32),
+        }
+        b_shard = _named(mesh, shd.recsys_batch_spec(mesh, "retrieval"), a_batch)
+        return Cell(cfg.name, shape.name, step, (a_params, a_batch),
+                    (p_shard, b_shard),
+                    shd.ns(mesh, None, tuple(mesh.axis_names)))
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def build_cell(arch_name: str, shape_name: str, mesh) -> Cell:
+    cfg = cfgs.get_arch(arch_name)
+    shape = cfgs.SHAPES[cfg.family][shape_name]
+    if cfg.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(cfg, shape, mesh)
+        if shape.kind == "decode":
+            return _lm_decode_cell(cfg, shape, mesh)
+    if cfg.family == "gnn":
+        return _gnn_train_cell(cfg, shape, mesh)
+    if cfg.family == "recsys":
+        return _recsys_cell(cfg, shape, mesh)
+    raise ValueError((arch_name, shape_name))
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for name, cfg in cfgs.all_archs().items():
+        for shape_name in cfgs.SHAPES[cfg.family]:
+            out.append((name, shape_name))
+    return out

@@ -1,0 +1,311 @@
+"""GNN architectures: GIN, PNA, EGNN, NequIP-lite.
+
+All message passing is expressed as gather (``jnp.take`` over edge endpoint
+indices) + ``jax.ops.segment_sum``-family reductions — JAX has no CSR/CSC
+sparse, so the edge-index scatter IS the system (assignment note). This is
+exactly the Property-Array gather the paper targets: with DBG reordering the
+hot (high-degree) node rows form a prefix, serviced by the ``hot_gather``
+Pallas kernel / the hot-replicated distributed exchange.
+
+Graph batch dict convention:
+  x      (N, F) float32 node features
+  src    (E,)  int32 edge sources
+  dst    (E,)  int32 edge destinations
+  emask  (E,)  bool   valid-edge mask (padding)
+  coords (N, 3) float32 (egnn / nequip)
+  species(N,)  int32   (nequip)
+  graph_id (N,) int32  molecule batching (segment readout)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.nn import layers as L
+
+
+def _mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [L.dense_init(k, a, b) for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(params, x, act=jax.nn.silu, compute_dtype=jnp.float32):
+    for i, p in enumerate(params):
+        x = L.dense(p, x, compute_dtype)
+        if i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def _deg(dst, n, emask):
+    ones = jnp.where(emask, 1.0, 0.0)
+    return jax.ops.segment_sum(ones, dst, num_segments=n)
+
+
+# ---------------------------------------------------------------------------
+# GIN (Xu et al. 2019) — sum aggregator, learnable eps
+# ---------------------------------------------------------------------------
+def gin_init(key, cfg: GNNConfig, d_feat: int):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        din = d_feat if i == 0 else d
+        layers.append(
+            {
+                "mlp": _mlp_init(ks[i], [din, d, d]),
+                "eps": jnp.zeros(()) if cfg.eps_learnable else None,
+                "ln": L.layernorm_init(d),
+            }
+        )
+    return {"layers": layers, "out": L.dense_init(ks[-1], d, cfg.d_out)}
+
+
+def gin_apply(params, cfg: GNNConfig, batch: Dict):
+    h, src, dst, emask = batch["x"], batch["src"], batch["dst"], batch["emask"]
+    n = h.shape[0]
+    for lp in params["layers"]:
+        msg = jnp.take(h, src, axis=0)
+        msg = jnp.where(emask[:, None], msg, 0.0)
+        agg = jax.ops.segment_sum(msg, dst, num_segments=n)
+        eps = lp["eps"] if lp["eps"] is not None else 0.0
+        h = _mlp(lp["mlp"], (1.0 + eps) * h + agg)
+        h = jax.nn.relu(L.layernorm(lp["ln"], h))
+    return L.dense(params["out"], h, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# PNA (Corso et al. 2020) — multi-aggregator + degree scalers
+# ---------------------------------------------------------------------------
+def pna_init(key, cfg: GNNConfig, d_feat: int):
+    ks = jax.random.split(key, 2 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    n_agg = len(cfg.aggregators) * len(cfg.scalers)
+    layers = []
+    for i in range(cfg.n_layers):
+        din = d_feat if i == 0 else d
+        layers.append(
+            {
+                "pre": _mlp_init(ks[2 * i], [2 * din, d]),
+                "post": _mlp_init(ks[2 * i + 1], [n_agg * d + din, d, d]),
+                "ln": L.layernorm_init(d),
+            }
+        )
+    return {"layers": layers, "out": L.dense_init(ks[-1], d, cfg.d_out)}
+
+
+def pna_apply(params, cfg: GNNConfig, batch: Dict, mean_log_deg: float = 1.0):
+    h, src, dst, emask = batch["x"], batch["src"], batch["dst"], batch["emask"]
+    n = h.shape[0]
+    deg = _deg(dst, n, emask)
+    log_deg = jnp.log1p(deg)
+    delta = max(mean_log_deg, 1e-3)
+
+    for lp in params["layers"]:
+        hi = jnp.take(h, dst, axis=0)
+        hj = jnp.take(h, src, axis=0)
+        m = _mlp(lp["pre"], jnp.concatenate([hi, hj], axis=-1))
+        m = jnp.where(emask[:, None], m, 0.0)
+
+        s = jax.ops.segment_sum(m, dst, num_segments=n)
+        cnt = jnp.maximum(deg, 1.0)[:, None]
+        mean = s / cnt
+        mx = jax.ops.segment_max(jnp.where(emask[:, None], m, -jnp.inf), dst, num_segments=n)
+        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        mn = jax.ops.segment_min(jnp.where(emask[:, None], m, jnp.inf), dst, num_segments=n)
+        mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+        sq = jax.ops.segment_sum(m * m, dst, num_segments=n) / cnt
+        # eps inside sqrt: grad(sqrt) at 0 is inf -> NaN gradients otherwise
+        std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+
+        aggs = {"mean": mean, "max": mx, "min": mn, "std": std}
+        scaled = []
+        for a in cfg.aggregators:
+            base = aggs[a]
+            for sc in cfg.scalers:
+                if sc == "identity":
+                    scaled.append(base)
+                elif sc == "amplification":
+                    scaled.append(base * (log_deg / delta)[:, None])
+                elif sc == "attenuation":
+                    scaled.append(base * (delta / jnp.maximum(log_deg, 1e-3))[:, None])
+        z = jnp.concatenate(scaled + [h], axis=-1)
+        h = jax.nn.relu(L.layernorm(lp["ln"], _mlp(lp["post"], z)))
+    return L.dense(params["out"], h, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# EGNN (Satorras et al. 2021) — E(n)-equivariant, scalar-distance messages
+# ---------------------------------------------------------------------------
+def egnn_init(key, cfg: GNNConfig, d_feat: int):
+    ks = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        din = d_feat if i == 0 else d
+        layers.append(
+            {
+                "phi_e": _mlp_init(ks[3 * i], [2 * din + 1, d, d]),
+                "phi_x": _mlp_init(ks[3 * i + 1], [d, d, 1]),
+                "phi_h": _mlp_init(ks[3 * i + 2], [din + d, d, d]),
+            }
+        )
+    return {"layers": layers, "out": L.dense_init(ks[-1], d, cfg.d_out)}
+
+
+def egnn_apply(params, cfg: GNNConfig, batch: Dict):
+    h, src, dst, emask = batch["x"], batch["src"], batch["dst"], batch["emask"]
+    coords = batch["coords"]
+    n = h.shape[0]
+    for lp in params["layers"]:
+        xi, xj = jnp.take(coords, dst, axis=0), jnp.take(coords, src, axis=0)
+        diff = xi - xj
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        hi, hj = jnp.take(h, dst, axis=0), jnp.take(h, src, axis=0)
+        m = _mlp(lp["phi_e"], jnp.concatenate([hi, hj, d2], axis=-1))
+        m = jax.nn.silu(m)
+        m = jnp.where(emask[:, None], m, 0.0)
+        # coordinate update (equivariant)
+        w = _mlp(lp["phi_x"], m)
+        xupd = jax.ops.segment_sum(diff * w, dst, num_segments=n)
+        cnt = jnp.maximum(_deg(dst, n, emask), 1.0)[:, None]
+        coords = coords + xupd / cnt
+        # feature update
+        magg = jax.ops.segment_sum(m, dst, num_segments=n)
+        h = _mlp(lp["phi_h"], jnp.concatenate([h, magg], axis=-1))
+    return L.dense(params["out"], h, jnp.float32), coords
+
+
+# ---------------------------------------------------------------------------
+# NequIP-lite — O(3)-equivariant with restricted tensor-product paths
+# (full e3nn CG products are out of scope; the restricted path set
+#  {0⊗Yl→l, l⊗Y0→l, 1⊗Y1→0} is individually equivariant. See DESIGN.md.)
+# ---------------------------------------------------------------------------
+def _bessel_rbf(r, n_rbf, cutoff):
+    # Bessel radial basis with smooth polynomial cutoff (NequIP defaults)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rr = jnp.maximum(r, 1e-6)
+    rbf = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * rr[..., None] / cutoff) / rr[..., None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5  # C2-smooth cutoff
+    return rbf * env[..., None]
+
+
+def _y2(u):
+    """5 real l=2 spherical-harmonic components of unit vector u (N,3)."""
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    c = np.sqrt(3.0)
+    return jnp.stack(
+        [c * x * y, c * y * z, 0.5 * (3 * z * z - 1.0), c * x * z,
+         0.5 * c * (x * x - y * y)],
+        axis=-1,
+    )
+
+
+def nequip_init(key, cfg: GNNConfig, n_species: int = 8):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 6 * cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                # radial nets: rbf -> per-channel weights for each TP path
+                "r00": _mlp_init(ks[6 * i + 0], [cfg.n_rbf, d, d]),
+                "r01": _mlp_init(ks[6 * i + 1], [cfg.n_rbf, d, d]),
+                "r11": _mlp_init(ks[6 * i + 2], [cfg.n_rbf, d, d]),
+                "r110": _mlp_init(ks[6 * i + 3], [cfg.n_rbf, d, d]),
+                "r02": _mlp_init(ks[6 * i + 4], [cfg.n_rbf, d, d]) if cfg.l_max >= 2 else None,
+                "r22": _mlp_init(ks[6 * i + 5], [cfg.n_rbf, d, d]) if cfg.l_max >= 2 else None,
+                "self0": L.dense_init(jax.random.fold_in(ks[6 * i], 1), d, d),
+                "self1": L.dense_init(jax.random.fold_in(ks[6 * i], 2), d, d),
+                "self2": L.dense_init(jax.random.fold_in(ks[6 * i], 3), d, d),
+                "gate": L.dense_init(jax.random.fold_in(ks[6 * i], 4), d, 2 * d),
+            }
+        )
+    return {
+        "embed": jax.random.normal(ks[-2], (n_species, d)) * 0.5,
+        "layers": layers,
+        "out": _mlp_init(ks[-1], [d, d, 1]),
+    }
+
+
+def nequip_apply(params, cfg: GNNConfig, batch: Dict):
+    """Returns (per-node energy, forces-free). Features: s (N,d), v (N,d,3),
+    t (N,d,5); all channel-major."""
+    src, dst, emask = batch["src"], batch["dst"], batch["emask"]
+    coords, species = batch["coords"], batch["species"]
+    n = coords.shape[0]
+    d = cfg.d_hidden
+
+    rij = jnp.take(coords, dst, axis=0) - jnp.take(coords, src, axis=0)
+    r = jnp.sqrt(jnp.maximum(jnp.sum(rij * rij, axis=-1), 1e-12))
+    u = rij / r[:, None]
+    rbf = _bessel_rbf(r, cfg.n_rbf, cfg.cutoff)          # (E, n_rbf)
+    y1 = u                                                # (E, 3)
+    y2 = _y2(u) if cfg.l_max >= 2 else None               # (E, 5)
+    valid = emask & (r < cfg.cutoff)
+
+    s = jnp.take(params["embed"], species, axis=0)        # (N, d)
+    v = jnp.zeros((n, d, 3))
+    t = jnp.zeros((n, d, 5)) if cfg.l_max >= 2 else None
+
+    def seg(x, w):
+        x = jnp.where(valid.reshape((-1,) + (1,) * (x.ndim - 1)), x * w, 0.0)
+        return jax.ops.segment_sum(x, dst, num_segments=n)
+
+    for lp in params["layers"]:
+        sj = jnp.take(s, src, axis=0)                     # (E, d)
+        vj = jnp.take(v, src, axis=0)                     # (E, d, 3)
+        w00 = _mlp(lp["r00"], rbf)                        # (E, d)
+        w01 = _mlp(lp["r01"], rbf)
+        w11 = _mlp(lp["r11"], rbf)
+        w110 = _mlp(lp["r110"], rbf)
+
+        # l=0 out: 0⊗Y0→0 and 1⊗Y1→0 (dot product path)
+        s_new = seg(sj, w00) + seg(jnp.einsum("edk,ek->ed", vj, y1), w110)
+        # l=1 out: 0⊗Y1→1 and 1⊗Y0→1
+        v_new = seg(sj[:, :, None] * y1[:, None, :], w01[:, :, None]) + seg(
+            vj, w11[:, :, None]
+        )
+        if cfg.l_max >= 2:
+            tj = jnp.take(t, src, axis=0)
+            w02 = _mlp(lp["r02"], rbf)
+            w22 = _mlp(lp["r22"], rbf)
+            t_new = seg(sj[:, :, None] * y2[:, None, :], w02[:, :, None]) + seg(
+                tj, w22[:, :, None]
+            )
+        # self-interaction (channel mixing) + gated nonlinearity
+        s_mix = L.dense(lp["self0"], s + s_new)
+        v_mix = jnp.einsum("ndk,do->nok", v + v_new, lp["self1"]["w"])
+        gates = L.dense(lp["gate"], jax.nn.silu(s_mix))
+        g1, g0 = gates[:, :d], gates[:, d:]
+        s = jax.nn.silu(s_mix + g0)
+        v = v_mix * jax.nn.sigmoid(g1)[:, :, None]
+        if cfg.l_max >= 2:
+            t_mix = jnp.einsum("ndk,do->nok", t + t_new, lp["self2"]["w"])
+            t = t_mix * jax.nn.sigmoid(g1)[:, :, None]
+
+    energy = _mlp(params["out"], s)[:, 0]                 # invariant readout
+    return energy
+
+
+KINDS = {
+    "gin": (gin_init, gin_apply),
+    "pna": (pna_init, pna_apply),
+    "egnn": (egnn_init, egnn_apply),
+    "nequip": (nequip_init, nequip_apply),
+}
+
+
+def init(key, cfg: GNNConfig, d_feat: int):
+    if cfg.kind == "nequip":
+        return nequip_init(key, cfg)
+    return KINDS[cfg.kind][0](key, cfg, d_feat)
+
+
+def apply(params, cfg: GNNConfig, batch: Dict):
+    return KINDS[cfg.kind][1](params, cfg, batch)

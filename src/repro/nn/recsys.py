@@ -1,0 +1,188 @@
+"""MIND: Multi-Interest Network with Dynamic routing (Li et al., CIKM'19).
+
+Pipeline: item-embedding lookup over the user's behaviour history
+(EmbeddingBag — the huge sparse-table hot path), capsule dynamic routing
+into ``n_interests`` interest capsules, label-aware attention for training,
+sampled-softmax loss; serving scores candidates against interests with a
+max-over-interests reduction.
+
+GRASP tie-in: item popularity is Zipfian — with the table rows ordered by
+popularity (the recsys analogue of DBG reordering), the leading rows form
+the High Reuse Region: pinned in VMEM by ``kernels/embedding_bag`` and
+replicated across chips by the distributed plan while the cold tail stays
+row-sharded.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.nn import layers as L
+
+
+def init(key, cfg: RecsysConfig, hot_rows: int = 0):
+    """``hot_rows > 0`` splits the popularity-ordered table at the GRASP
+    High-Reuse boundary: ``items_hot`` (replicated across chips / pinned in
+    VMEM) + ``items_cold`` (row-sharded tail). The range test ``id <
+    hot_rows`` IS the paper's ABR classification."""
+    ks = jax.random.split(key, 5)
+    d = cfg.embed_dim
+    p = {
+        # shared bilinear map S for capsule routing (B2I variant)
+        "s_mat": jax.random.normal(ks[1], (d, d), jnp.float32) / np.sqrt(d),
+        "mlp": [
+            L.dense_init(ks[2], d, cfg.d_hidden),
+            L.dense_init(ks[3], cfg.d_hidden, d),
+        ],
+    }
+    if hot_rows > 0:
+        p["items_hot"] = jax.random.normal(ks[0], (hot_rows, d)) * 0.05
+        p["items_cold"] = (
+            jax.random.normal(ks[4], (cfg.n_items - hot_rows, d)) * 0.05
+        )
+    else:
+        p["items"] = jax.random.normal(ks[0], (cfg.n_items, d)) * 0.05
+    return p
+
+
+COLD_FRACTION = 0.5  # bounded cold-path capacity (Zipf: ~8% of lookups
+                     # miss a 2^18-row hot prefix; 0.5 is a safety margin)
+
+
+def table_lookup(params, ids):
+    """GRASP-classified lookup: replicated hot prefix (zero collective) vs
+    a *compacted* bounded gather of the row-sharded cold tail.
+
+    A naive where(hot, cold) still pays the sharded-gather collective for
+    every id (measured: no win); compaction makes the collective
+    proportional to the actual cold count — the same bounded cold fixup the
+    hot_gather Pallas kernel uses. Overflow beyond capacity reads row 0 of
+    the cold shard (graceful degradation, like MoE token dropping)."""
+    if "items_hot" not in params:
+        return jnp.take(params["items"], ids, axis=0)
+    h = params["items_hot"].shape[0]
+    d = params["items_hot"].shape[1]
+    shape = ids.shape
+    flat = ids.reshape(-1)
+    n = flat.shape[0]
+    cap = max(int(n * COLD_FRACTION) // 256 * 256, 256)
+
+    hot_rows = jnp.take(params["items_hot"], jnp.clip(flat, 0, h - 1), axis=0)
+    cold = flat >= h
+    pos = jnp.cumsum(cold.astype(jnp.int32)) - 1
+    slot = jnp.where(cold & (pos < cap), pos, cap)
+    comp = jnp.zeros((cap + 1,), flat.dtype).at[slot].set(
+        jnp.maximum(flat - h, 0)
+    )
+    cold_rows = jnp.take(params["items_cold"], comp[:cap], axis=0)
+    cold_rows = jnp.concatenate(
+        [cold_rows, jnp.zeros((1, d), cold_rows.dtype)], axis=0
+    )
+    fix = jnp.take(cold_rows, jnp.minimum(slot, cap), axis=0)
+    out = jnp.where(cold[:, None], fix, hot_rows)
+    return out.reshape(shape + (d,))
+
+
+def _squash(x, axis=-1, eps=1e-9):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + eps)
+
+
+def embedding_lookup(table, ids, impl: str = "jnp", plan=None):
+    """(B, H) ids -> (B, H, d). ``impl='pallas_hot'`` uses the two-tier
+    VMEM-pinned kernel with the GraspPlan hot prefix."""
+    if impl == "jnp":
+        return table_lookup(table, ids) if isinstance(table, dict) else jnp.take(table, ids, axis=0)
+    if impl == "pallas_hot":
+        from repro.kernels.embedding_bag import ops as bag_ops
+
+        b, h = ids.shape
+        out = bag_ops.hot_lookup(table, ids.reshape(-1), plan=plan)
+        return out.reshape(b, h, -1)
+    raise ValueError(impl)
+
+
+def user_interests(params, cfg: RecsysConfig, hist: jnp.ndarray,
+                   hist_mask: jnp.ndarray, impl: str = "jnp", plan=None):
+    """hist (B, H) item ids -> interest capsules (B, K, d).
+
+    Dynamic routing (capsule_iters rounds) with fixed random-ish init
+    logits derived from item ids (deterministic, matches MIND's B2I)."""
+    b, hlen = hist.shape
+    d, k = cfg.embed_dim, cfg.n_interests
+    if impl == "jnp":
+        e = table_lookup(params, hist)                               # (B, H, d)
+    else:
+        e = embedding_lookup(params["items"], hist, impl, plan)
+    e = jnp.where(hist_mask[..., None], e, 0.0)
+    eh = jnp.einsum("bhd,de->bhe", e, params["s_mat"])           # bilinear map
+
+    # deterministic routing-logit init (hash of item id x capsule)
+    binit = jnp.sin(hist[..., None].astype(jnp.float32) * (1.0 + jnp.arange(k)))
+    logits = binit  # (B, H, K)
+
+    interests = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(logits, axis=-1)                      # (B, H, K)
+        w = jnp.where(hist_mask[..., None], w, 0.0)
+        z = jnp.einsum("bhk,bhd->bkd", w, eh)
+        interests = _squash(z)                                   # (B, K, d)
+        logits = logits + jnp.einsum("bkd,bhd->bhk", interests, eh)
+
+    # per-interest MLP refinement
+    h = L.dense(params["mlp"][0], interests, jnp.float32)
+    h = jax.nn.relu(h)
+    return interests + L.dense(params["mlp"][1], h, jnp.float32)
+
+
+def label_aware_attention(interests, target_emb, p: float = 2.0):
+    """MIND label-aware attention: target attends over interests."""
+    scores = jnp.einsum("bkd,bd->bk", interests, target_emb)
+    w = jax.nn.softmax(scores * p, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, interests)
+
+
+def loss_fn(params, cfg: RecsysConfig, batch: Dict, impl: str = "jnp", plan=None):
+    """Sampled softmax: target vs shared negatives.
+
+    batch: hist (B,H) int32, hist_mask (B,H) bool, target (B,) int32,
+           negatives (Neg,) int32.
+    """
+    interests = user_interests(params, cfg, batch["hist"], batch["hist_mask"],
+                               impl, plan)
+    tgt = table_lookup(params, batch["target"])                  # (B, d)
+    user = label_aware_attention(interests, tgt)                 # (B, d)
+    neg = table_lookup(params, batch["negatives"])               # (Neg, d)
+    pos_logit = jnp.sum(user * tgt, axis=-1, keepdims=True)      # (B, 1)
+    neg_logit = user @ neg.T                                     # (B, Neg)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -logp[:, 0].mean()
+
+
+def serve_scores(params, cfg: RecsysConfig, batch: Dict, impl: str = "jnp",
+                 plan=None):
+    """Online inference: score each request's candidate set.
+
+    batch: hist (B,H), hist_mask (B,H), candidates (B, C) int32.
+    Max-over-interests scoring (MIND serving)."""
+    interests = user_interests(params, cfg, batch["hist"], batch["hist_mask"],
+                               impl, plan)
+    cand = table_lookup(params, batch["candidates"])               # (B, C, d)
+    scores = jnp.einsum("bkd,bcd->bkc", interests, cand)
+    return scores.max(axis=1)                                      # (B, C)
+
+
+def retrieval_scores(params, cfg: RecsysConfig, batch: Dict, impl: str = "jnp",
+                     plan=None):
+    """One query against n_candidates (batched dot, no loop): the
+    ``retrieval_cand`` shape. candidates (C,) int32 (C ~ 1e6)."""
+    interests = user_interests(params, cfg, batch["hist"], batch["hist_mask"],
+                               impl, plan)                         # (1, K, d)
+    cand = table_lookup(params, batch["candidates"])               # (C, d)
+    scores = jnp.einsum("bkd,cd->bkc", interests, cand)
+    return scores.max(axis=1)                                      # (1, C)

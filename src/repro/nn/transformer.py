@@ -1,0 +1,271 @@
+"""Decoder-only transformer LM (dense + MoE), GQA + RoPE, scan-over-layers.
+
+Layer parameters are stacked on a leading axis and iterated with
+``jax.lax.scan`` so the HLO stays O(1) in depth — essential for compiling
+96-layer configs on 512 placeholder devices. ``jax.checkpoint`` (remat)
+wraps the scanned body when ``cfg.remat``.
+
+Entry points used by launch/dryrun and the trainer:
+  init(key, cfg)                         -> params
+  forward(params, cfg, tokens)           -> logits
+  loss_fn(params, cfg, batch)            -> scalar loss
+  prefill(params, cfg, tokens)           -> (last logits, KVCache)
+  decode_step(params, cfg, cache, token) -> (logits, KVCache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.nn import layers as L
+
+
+def _norm_init(cfg, d):
+    return L.rmsnorm_init(d) if cfg.norm == "rmsnorm" else L.layernorm_init(d)
+
+
+def _norm(cfg, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+def init_layer(key, cfg: LMConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn": L.gqa_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim),
+        "ln1": _norm_init(cfg, cfg.d_model),
+        "ln2": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.moe:
+        p["moe"] = L.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.gated)
+    else:
+        p["ffn"] = L.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated)
+    return p
+
+
+def init(key, cfg: LMConfig):
+    kemb, klayers, kout = jax.random.split(key, 3)
+    layer_keys = jax.random.split(klayers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": jax.random.normal(kemb, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "layers": stacked,
+        "ln_f": _norm_init(cfg, cfg.d_model),
+        "lm_head": L.dense_init(kout, cfg.d_model, cfg.vocab, scale=0.02),
+    }
+
+
+def _attn_block(cfg: LMConfig, p, x, positions, cache_kv=None, kv_len=None):
+    """Returns (attn output, (k, v) of this call)."""
+    from repro.dist.sharding import constrain
+
+    b, s, d = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv, cfg.head_dim)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if s > 1:
+        # pin the attention layout: batch over data axes, heads over model,
+        # full sequence — otherwise SPMD can fall back to batch replication
+        # inside the rematted backward (observed on the 512-dev dry-run)
+        bax = ("pod", "data")
+        q = constrain(q, bax, None, "model", None)
+        k = constrain(k, bax, None, None, None)
+        v = constrain(v, bax, None, None, None)
+    if cache_kv is not None:
+        ck, cv = cache_kv  # (B, S_max, KV, hd)
+        out = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
+    else:
+        out = L.attention(q, k, v, causal=True)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return L.dense(p["wo"], out), (k, v)
+
+
+def _layer_fwd(cfg: LMConfig, lp, x, positions, cache=None, kv_len=None):
+    h, kv = _attn_block(
+        cfg, lp["attn"], _norm(cfg, lp["ln1"], x), positions, cache, kv_len
+    )
+    x = x + h
+    hin = _norm(cfg, lp["ln2"], x)
+    if cfg.moe:
+        b, s, d = hin.shape
+        out, aux = L.moe(
+            lp["moe"],
+            hin.reshape(b * s, d),
+            top_k=cfg.moe.top_k,
+            act=cfg.act,
+            capacity_factor=cfg.moe.capacity_factor,
+        )
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = L.ffn(lp["ffn"], hin, act=cfg.act), 0.0
+    return x + out, aux, kv
+
+
+def _constrain_seq(cfg, x):
+    """Megatron-style sequence parallelism: between blocks the activation
+    stash is sharded over the model axis along S (memory / chips budget for
+    the 340B-class archs). GSPMD inserts the gather/scatter collectives."""
+    if getattr(cfg, "seq_shard", False):
+        from repro.dist.sharding import constrain
+
+        return constrain(x, ("pod", "data"), "model", None)
+    return x
+
+
+def trunk(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """tokens (B, S) -> final hidden states (B, S, d), aux loss.
+
+    ``cfg.layer_groups > 1`` enables sqrt-L nested-group remat: the outer
+    scan checkpoints only group boundaries and the inner scan is recomputed
+    per group in the backward — stash (G + L/G) activations instead of L
+    (the 340B-class memory budget; EXPERIMENTS.md §Perf)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _constrain_seq(cfg, x)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _ = _layer_fwd(cfg, lp, x, positions)
+        return (_constrain_seq(cfg, x), aux + a), None
+
+    groups = getattr(cfg, "layer_groups", 1)
+    if groups > 1 and cfg.n_layers % groups == 0:
+        per = cfg.n_layers // groups
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"]
+        )
+
+        @jax.checkpoint
+        def group_body(carry, gp):
+            out, _ = jax.lax.scan(body, carry, gp)
+            return out, None
+
+        (x, aux), _ = jax.lax.scan(group_body, (x, 0.0), grouped)
+    else:
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(scan_body, (x, 0.0), params["layers"])
+    return _norm(cfg, params["ln_f"], x), aux
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """tokens (B, S) -> logits (B, S, vocab). Returns (logits, aux_loss).
+    Materializes full logits — use only at small scale (smoke tests)."""
+    x, aux = trunk(params, cfg, tokens)
+    logits = L.dense(params["lm_head"], x, jnp.float32)
+    return logits, aux
+
+
+LOSS_CHUNK = 128  # sequence positions per unrolled CE chunk (perf: 512->128
+                  # cut peak logits temp 4x; see EXPERIMENTS.md §Perf)
+
+
+def loss_fn(params, cfg: LMConfig, batch):
+    """Chunked cross-entropy: the (B, S, vocab) logits tensor is never
+    materialized (vocab up to 256k x 1M tokens would be TBs). The head
+    matmul + softmax run per sequence chunk under jax.checkpoint, so the
+    backward recomputes chunk logits instead of storing them. Logits are
+    bf16 with f32 softmax statistics — the backward's dlogits/dx
+    all-reduces then move bf16 (half the dominant collective)."""
+    x, aux = trunk(params, cfg, batch["tokens"])
+    b, s, d = x.shape
+    labels = batch["labels"]
+    n_chunks = max(s // LOSS_CHUNK, 1)
+
+    @jax.checkpoint
+    def chunk_nll(xc, lc):
+        logits = L.dense(params["lm_head"], xc, jnp.bfloat16)
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        shifted = (logits - m).astype(jnp.float32)
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+        tgt = jnp.take_along_axis(shifted, lc[..., None], axis=-1)[..., 0]
+        return (lse - tgt).sum()
+
+    xs = x.reshape(b, n_chunks, s // n_chunks, d)
+    ls = labels.reshape(b, n_chunks, s // n_chunks)
+    total = 0.0
+    for i in range(n_chunks):  # unrolled: collectives stay loop-free in HLO
+        total = total + chunk_nll(xs[:, i], ls[:, i])
+    loss = total / (b * s)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    k: jnp.ndarray   # (L, B, S_max, KV, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — valid prefix
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, max_len: Optional[int] = None):
+    """Full-sequence forward; returns (logits at last position, cache)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        x, _, (k, v) = _layer_fwd(cfg, lp, x, positions)
+        return _constrain_seq(cfg, x), (k, v)
+
+    x = _constrain_seq(cfg, x)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = _norm(cfg, params["ln_f"], x[:, -1:])
+    logits = L.dense(params["lm_head"], x, jnp.float32)[:, 0]
+    pad = max_len - s
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, KVCache(k=ks, v=vs, length=jnp.int32(s))
+
+
+def decode_step(params, cfg: LMConfig, cache: KVCache, token: jnp.ndarray):
+    """token (B,) int32 -> (logits (B,vocab), updated cache). One new token
+    against a long KV cache — the ``decode_32k`` / ``long_500k`` step."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(cache.length[None, None], (b, 1))
+
+    def layer(x, inp):
+        lp, ck, cv = inp
+        xb = _norm(cfg, lp["ln1"], x)
+        q = L.dense(lp["attn"]["wq"], xb).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = L.dense(lp["attn"]["wk"], xb).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+        v = L.dense(lp["attn"]["wv"], xb).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache.length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache.length, 0, 0))
+        out = L.attention(q, ck, cv, causal=False, kv_len=cache.length + 1)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        x = x + L.dense(lp["attn"]["wo"], out)
+        hin = _norm(cfg, lp["ln2"], x)
+        if cfg.moe:
+            o, _ = L.moe(lp["moe"], hin.reshape(b, -1), top_k=cfg.moe.top_k, act=cfg.act)
+            x = x + o.reshape(b, 1, -1)
+        else:
+            x = x + L.ffn(lp["ffn"], hin, act=cfg.act)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(layer, x, (params["layers"], cache.k, cache.v))
+    x = _norm(cfg, params["ln_f"], x)
+    logits = L.dense(params["lm_head"], x, jnp.float32)[:, 0]
+    return logits, KVCache(k=ks, v=vs, length=cache.length + 1)

@@ -1,0 +1,178 @@
+"""Optimizers: SGD(+momentum), AdamW (optional bf16 moments), Adafactor.
+
+optax is not available in this container, so the framework ships its own.
+API: ``make(cfg) -> (init_fn, update_fn)`` with
+  init_fn(params) -> state
+  update_fn(grads, state, params) -> (new_params, new_state)
+
+Adafactor (Shazeer & Stern 2018) factors the second moment of matrices into
+row/col statistics — the memory-budget enabler for nemotron-4-340b on
+16GB/chip (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # sgd | adamw | adafactor
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves Adam state memory
+    momentum: float = 0.9          # sgd
+    factored_eps: float = 1e-30    # adafactor
+
+
+def _clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def make(cfg: OptConfig):
+    if cfg.name == "sgd":
+        return _make_sgd(cfg)
+    if cfg.name == "adamw":
+        return _make_adamw(cfg)
+    if cfg.name == "adafactor":
+        return _make_adafactor(cfg)
+    raise ValueError(cfg.name)
+
+
+def _make_sgd(cfg: OptConfig):
+    def init(params):
+        return {
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, cfg.grad_clip)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g, state["mu"], grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - cfg.lr * m, params, mu
+        )
+        return new_params, {"mu": mu, "step": state["step"] + 1}
+
+    return init, update
+
+
+def _make_adamw(cfg: OptConfig):
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+            return p - cfg.lr * delta, m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        m = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        v = jax.tree_util.tree_map(
+            lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return init, update
+
+
+def _make_adafactor(cfg: OptConfig):
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def z(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree_util.tree_map(z, params,
+                                        is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + cfg.factored_eps
+            if _factored(p):
+                vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., :, None]
+                    * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30)
+                )
+                pre = gf * jax.lax.rsqrt(denom + cfg.factored_eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv_ = decay * v["v"] + (1 - decay) * g2
+                pre = gf * jax.lax.rsqrt(nv_ + cfg.factored_eps)
+                nv = {"v": nv_}
+            # update clipping (RMS <= 1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-30)
+            pre = pre / jnp.maximum(1.0, rms)
+            new_p = p - cfg.lr * (pre + cfg.weight_decay * p)
+            return new_p, nv
+
+        flat, tree = jax.tree_util.tree_flatten(params)
+        gflat = tree.flatten_up_to(grads)
+        vflat = jax.tree_util.tree_leaves(
+            state["v"], is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        )
+        outs = [upd(p, g, v) for p, g, v in zip(flat, gflat, vflat)]
+        new_params = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+        return new_params, {"v": new_v, "step": step}
+
+    return init, update
+
+
+def for_arch(arch_cfg, lr: float = 1e-3) -> OptConfig:
+    name = getattr(arch_cfg, "optimizer", "adamw")
+    # bf16 moments for multi-billion-param models (memory budget, DESIGN.md)
+    big = getattr(arch_cfg, "param_count", lambda: 0)() > 8e9
+    return OptConfig(name=name, lr=lr,
+                     moment_dtype="bfloat16" if big else "float32")

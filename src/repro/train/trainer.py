@@ -1,0 +1,123 @@
+"""Training driver: microbatched/gradient-accumulated step, remat policy,
+metrics, checkpoint + fault-tolerant loop integration.
+
+``Trainer`` is the single-process engine used by examples/ and the
+end-to-end test; on the production mesh the same step is jitted with the
+cell shardings from launch/steps.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train import ft as ft_mod
+from repro.train import optimizer as opt_mod
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    microbatches: int = 1          # gradient accumulation
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    donate: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        loss_fn: Callable,          # (params, batch) -> scalar loss
+        init_params: Callable[[], Any],
+        opt_cfg: opt_mod.OptConfig,
+        tcfg: TrainerConfig,
+        mesh=None,
+        in_shardings=None,
+        out_shardings=None,
+    ):
+        self.loss_fn = loss_fn
+        self.init_params = init_params
+        self.opt_init, self.opt_update = opt_mod.make(opt_cfg)
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.watchdog = ft_mod.StragglerWatchdog()
+        self.history: list = []
+
+        def step(params, opt_state, batch):
+            if tcfg.microbatches > 1:
+                # gradient accumulation over leading-dim splits
+                def micro(g_acc, mb):
+                    loss, g = jax.value_and_grad(self.loss_fn)(params, mb)
+                    return jax.tree_util.tree_map(jnp.add, g_acc, g), loss
+
+                splits = jax.tree_util.tree_map(
+                    lambda x: x.reshape((tcfg.microbatches, -1) + x.shape[1:]),
+                    batch,
+                )
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, losses = jax.lax.scan(
+                    lambda acc, mb: micro(acc, mb), zeros, splits
+                )
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / tcfg.microbatches, grads
+                )
+                loss = losses.mean()
+            else:
+                loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+            new_params, new_opt = self.opt_update(grads, opt_state, params)
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(g.astype(jnp.float32) ** 2)
+                    for g in jax.tree_util.tree_leaves(grads)
+                )
+            )
+            return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+        kwargs = {}
+        if in_shardings is not None:
+            kwargs.update(in_shardings=in_shardings, out_shardings=out_shardings)
+        donate = (0, 1) if tcfg.donate else ()
+        self._step = jax.jit(step, donate_argnums=donate, **kwargs)
+
+    def init_state(self) -> Dict:
+        params = self.init_params()
+        return {"params": params, "opt": self.opt_init(params)}
+
+    def fit(self, batch_fn: Callable[[int], Dict],
+            injector: Optional[ft_mod.FailureInjector] = None) -> Dict:
+        """Run with the fault-tolerant restart loop when ckpt_dir is set.
+
+        ``batch_fn(step) -> batch`` must be deterministic in ``step`` (the
+        pipeline seeds per step) so restarts replay identical data."""
+        tcfg = self.tcfg
+
+        def step_fn(state, step):
+            b = jax.tree_util.tree_map(jnp.asarray, batch_fn(step))
+            params, opt, metrics = self._step(state["params"], state["opt"], b)
+            if (step + 1) % tcfg.log_every == 0 or step == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": step + 1, **m})
+                print(f"[train] step {step+1:5d} "
+                      + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+            return {"params": params, "opt": opt}
+
+        if tcfg.ckpt_dir:
+            res = ft_mod.run_with_restarts(
+                self.init_state, step_fn, tcfg.num_steps, tcfg.ckpt_dir,
+                ckpt_every=tcfg.ckpt_every, injector=injector,
+                watchdog=self.watchdog,
+            )
+            return res.state
+        state = self.init_state()
+        for s in range(tcfg.num_steps):
+            state = step_fn(state, s)
+        return state

@@ -1,0 +1,148 @@
+"""LLC simulator + policies: unit semantics, paper invariants, and
+hypothesis properties (OPT optimality, GRASP==RRIP with hints disabled)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cachesim
+from repro.core.cachesim import Trace, finalize_trace, simulate
+from repro.core.policies import POLICIES
+from repro.core.regions import DEFAULT
+from repro.graph import datasets, traces
+from repro.graph.csr import apply_reorder
+from repro.core.reorder import reorder_ranks
+
+LLC = 16 * 1024  # 16 sets x 16 ways x 64B
+
+
+def mk_trace(lines, hints=None, pcs=None):
+    lines = np.asarray(lines, dtype=np.int64)
+    hints = np.full(lines.shape, 3, np.int8) if hints is None else np.asarray(hints, np.int8)
+    pcs = np.zeros(lines.shape, np.int32) if pcs is None else np.asarray(pcs, np.int32)
+    return finalize_trace(lines, hints, pcs)
+
+
+def test_lru_semantics_tiny():
+    # 1 set x 16 ways effectively: lines all map to set 0 with stride S
+    # repeat 16 lines -> all hits on second pass; 17 lines -> all misses (LRU)
+    s = 16  # num_sets for LLC/16 ways
+    fit = np.tile(np.arange(16) * s, 2)
+    r = simulate(mk_trace(fit), "lru", LLC)
+    assert r.hits == 16
+    over = np.tile(np.arange(17) * s, 2)
+    r = simulate(mk_trace(over), "lru", LLC)
+    assert r.hits == 0  # classic LRU thrash
+
+
+def test_opt_beats_lru_on_thrash():
+    s = 16
+    over = np.tile(np.arange(17) * s, 4)
+    lru = simulate(mk_trace(over), "lru", LLC)
+    opt = simulate(mk_trace(over), "opt", LLC)
+    assert opt.hits > lru.hits
+
+
+def test_next_use_computation():
+    nxt = cachesim.compute_next_use(np.array([5, 7, 5, 7, 5]))
+    assert nxt[0] == 2 and nxt[1] == 3 and nxt[2] == 4
+    assert nxt[3] > 4 and nxt[4] > 4  # INF
+
+
+def test_grasp_equals_rrip_when_hints_default():
+    """Paper Sec. III-A: ABRs not set => Default hints => GRASP degenerates
+    to the base RRIP scheme exactly."""
+    rng = np.random.default_rng(0)
+    lines = rng.zipf(1.3, 20_000) % 4096
+    t = mk_trace(lines)  # all-Default hints
+    a = simulate(t, "rrip", LLC)
+    b = simulate(t, "grasp", LLC)
+    assert a.hits == b.hits
+
+
+def test_grasp_beats_rrip_on_skewed_reordered_trace():
+    g = datasets.load("lj", scale=13)
+    g2 = apply_reorder(g, reorder_ranks(g, "dbg"))
+    llc = datasets.scaled_llc_bytes("lj", g2, elem_bytes=16)
+    tr, _ = traces.generate_trace(g2, "pr", llc, max_records=400_000)
+    rrip = simulate(tr, "rrip", llc)
+    grasp = simulate(tr, "grasp", llc)
+    opt = simulate(tr, "opt", llc)
+    assert grasp.misses < rrip.misses          # paper Fig. 5
+    assert opt.misses < grasp.misses           # Belady bound (Fig. 11)
+
+
+def test_hint_accounting_sums():
+    rng = np.random.default_rng(1)
+    lines = rng.integers(0, 2048, 5000)
+    hints = rng.integers(0, 4, 5000).astype(np.int8)
+    t = mk_trace(lines, hints)
+    r = simulate(t, "grasp", LLC)
+    assert r.hits == r.hits_by_hint.sum()
+    assert r.accesses == r.accesses_by_hint.sum()
+    assert np.all(r.misses_by_hint() >= 0)
+
+
+def test_pin100_protects_high_region():
+    """XMem-style pinning: a High-hinted line, once pinned, survives
+    arbitrary thrash (paper Sec. II-F pinning semantics)."""
+    s = 16
+    hot = 0
+    thrash = (1 + np.arange(64)) * s  # same set as hot, 64 distinct lines
+    lines = np.concatenate([[hot], thrash, [hot]])
+    hints = np.full(lines.shape, 2, np.int8)
+    hints[0] = hints[-1] = 0  # High-Reuse on the hot line
+    r = simulate(mk_trace(lines, hints), "pin_100", LLC)
+    assert r.hits_by_hint[0] == 1  # the re-access hits despite thrash
+
+
+def test_rrip_inserts_protect_against_scan():
+    """RRIP's distant insertion keeps a reused line resident through a
+    one-shot scan (the thrash-resistance LRU lacks)."""
+    s = 16
+    reused = np.arange(8) * s
+    scan = (100 + np.arange(64)) * s
+    lines = np.concatenate([np.tile(reused, 3), scan, reused])
+    rrip = simulate(mk_trace(lines), "rrip", LLC)
+    lru = simulate(mk_trace(lines), "lru", LLC)
+    assert rrip.hits >= lru.hits
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_opt_is_optimal_property(seed):
+    """Belady OPT (with bypass) never loses to any online policy."""
+    rng = np.random.default_rng(seed)
+    lines = rng.zipf(1.5, 3000) % 512
+    t = mk_trace(lines)
+    llc = 4 * 1024  # 4 sets x 16 ways
+    opt = simulate(t, "opt", llc)
+    for pol in ("lru", "rrip", "grasp", "ship_mem", "leeway"):
+        r = simulate(t, pol, llc)
+        assert opt.hits >= r.hits, (pol, opt.hits, r.hits)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_sim_invariants_all_policies(seed):
+    rng = np.random.default_rng(seed)
+    lines = rng.integers(0, 1024, 2000)
+    hints = rng.integers(0, 4, 2000).astype(np.int8)
+    pcs = rng.integers(0, 4, 2000).astype(np.int32)
+    t = mk_trace(lines, hints, pcs)
+    for pol in POLICIES:
+        r = simulate(t, pol, 4 * 1024)
+        assert 0 <= r.hits <= r.accesses, pol
+        # re-access of the same line immediately is always a hit (all
+        # policies install on miss except OPT's bypass)
+        if pol != "opt":
+            rep = mk_trace(np.repeat(lines[:500], 2))
+            rr = simulate(rep, pol, 4 * 1024)
+            assert rr.hits >= 500, pol
+
+
+def test_perfmodel_speedup_direction():
+    pm = cachesim.PerfModel()
+    base = cachesim.SimResult("rrip", 1000, 500, np.zeros(4), np.zeros(4))
+    better = cachesim.SimResult("grasp", 1000, 550, np.zeros(4), np.zeros(4))
+    assert pm.speedup(base, better) > 1.0
+    assert pm.speedup(base, base) == pytest.approx(1.0)

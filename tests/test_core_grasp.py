@@ -1,0 +1,108 @@
+"""GRASP core: hot-vertex stats (paper Table I), reordering invariants
+(paper Sec. II-E), ABR region classification (Sec. III-A/B), plan sizing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hotset, plan, regions, reorder
+from repro.graph import datasets, generate
+from repro.graph.csr import apply_reorder
+
+
+@pytest.fixture(scope="module")
+def g():
+    return datasets.load("tw", scale=13)
+
+
+def test_skew_stats_match_paper_band(g):
+    """Paper Table I: hot vertices 9-26% of total, covering 81-93% of edges."""
+    st_ = hotset.skew_stats(hotset.reuse_degree(g, "pull"))
+    assert 0.05 < st_.hot_fraction < 0.30
+    assert st_.edge_coverage > 0.75
+
+
+def test_uniform_graph_has_no_skew():
+    g = generate.uniform(12, 16, seed=1)
+    st_ = hotset.skew_stats(hotset.reuse_degree(g, "pull"))
+    # no-skew: hot set covers roughly its population share of edges
+    assert st_.edge_coverage < 0.75
+
+
+@pytest.mark.parametrize("technique", reorder.TECHNIQUES)
+def test_reorder_is_permutation(g, technique):
+    rank = reorder.reorder_ranks(g, technique)
+    assert np.array_equal(np.sort(rank), np.arange(g.num_nodes))
+
+
+@pytest.mark.parametrize("technique", ["sort", "hubsort", "dbg", "gorder_lite"])
+def test_reorder_segregates_hot_prefix(g, technique):
+    """After skew-aware reordering the hottest vertices form a prefix
+    (paper Fig. 3a) — prefix mean degree >> tail mean degree."""
+    rank = reorder.reorder_ranks(g, technique)
+    g2 = apply_reorder(g, rank)
+    deg = hotset.reuse_degree(g2, "pull")
+    k = g.num_nodes // 8
+    assert deg[:k].mean() > 10 * deg[-k:].mean()
+
+
+def test_reorder_preserves_edges(g):
+    rank = reorder.reorder_ranks(g, "dbg")
+    g2 = apply_reorder(g, rank)
+    assert g2.num_edges == g.num_edges
+    # spot-check: edge (u -> v) maps to (rank[u] -> rank[v])
+    src, dst = g.indices[:100], g.dst_ids()[:100]
+    s2 = set(zip(g2.indices.tolist(), g2.dst_ids().tolist()))
+    for u, v in zip(rank[src].tolist(), rank[dst].tolist()):
+        assert (u, v) in s2
+
+
+def test_sort_is_degree_descending(g):
+    rank = reorder.reorder_ranks(g, "sort")
+    g2 = apply_reorder(g, rank)
+    deg = hotset.reuse_degree(g2, "pull")
+    assert np.all(np.diff(deg) <= 0)
+
+
+def test_regions_classification():
+    r = regions.make_regions([(0, 1000)], llc_bytes=100)
+    addr = np.array([0, 50, 99, 100, 150, 199, 200, 500, 999, 1000, 5000])
+    hint = r.classify(addr)
+    assert hint.tolist() == [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3]
+
+
+def test_regions_multiple_arrays_divide_budget():
+    r = regions.make_regions([(0, 1000), (2000, 3000)], llc_bytes=100)
+    assert r.region_bytes == 50  # paper: LLC size / num arrays
+    assert r.classify(np.array([49]))[0] == regions.HIGH
+    assert r.classify(np.array([50]))[0] == regions.MODERATE
+    assert r.classify(np.array([2049]))[0] == regions.HIGH
+
+
+@given(
+    n=st.integers(100, 10_000),
+    elem=st.sampled_from([4, 8, 16]),
+    budget=st.integers(64, 1 << 16),
+)
+@settings(max_examples=25, deadline=None)
+def test_plan_properties(n, elem, budget):
+    p = plan.make_plan(n, elem, budget_bytes=budget)
+    assert 0 <= p.hot_size <= n
+    assert p.hot_size * elem <= budget
+    assert p.hot_size + p.moderate_size <= n
+    cls = p.classify_elem(np.arange(n))
+    # classification is monotone: hot prefix, then moderate, then cold
+    assert np.all(np.diff(cls) >= 0)
+    if p.hot_size:
+        assert cls[0] == 0 and cls[p.hot_size - 1] == 0
+        if p.hot_size < n:
+            assert cls[p.hot_size] != 0
+
+
+def test_plan_regions_consistent_with_elem_classification():
+    p = plan.make_plan(4096, 8, budget_bytes=4096)
+    r = p.regions()
+    idx = np.arange(4096)
+    byte_cls = r.classify(idx * 8)
+    elem_cls = p.classify_elem(idx)
+    assert np.array_equal(byte_cls[elem_cls == 0], np.zeros((p.hot_size,)))
+    assert np.all(byte_cls[elem_cls == 2] == 2)

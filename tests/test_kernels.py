@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode —
+CPU container; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag import ops as eb_ops
+from repro.kernels.embedding_bag import ref as eb_ref
+from repro.kernels.hot_gather import ops as hg_ops
+from repro.kernels.hot_gather import ref as hg_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "n,d,e,hot",
+    [
+        (1000, 8, 4096, 256),
+        (5000, 64, 8192, 1024),
+        (300, 130, 2048, 300),    # d not lane-aligned; hot == n (all hot)
+        (4096, 16, 2048, 64),     # tiny hot region
+    ],
+)
+def test_hot_gather_sweep(n, d, e, hot, dtype):
+    key = jax.random.PRNGKey(0)
+    prop = jax.random.normal(key, (n, d), dtype=jnp.float32).astype(dtype)
+    idx = jax.random.randint(key, (e,), 0, n, dtype=jnp.int32)
+    idx = jnp.where(jax.random.uniform(key, (e,)) < 0.85, idx % max(hot, 1), idx)
+    out = hg_ops.hot_gather(prop, idx, hot_size=hot)
+    ref = hg_ref.gather_ref(prop, idx)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=1e-6
+    )
+
+
+def test_hot_gather_no_skew_degrades_gracefully():
+    """All-cold indices (paper Fig. 9 adversarial case): result still exact."""
+    key = jax.random.PRNGKey(1)
+    prop = jax.random.normal(key, (2048, 32))
+    idx = jax.random.randint(key, (4096,), 1024, 2048, dtype=jnp.int32)
+    out = hg_ops.hot_gather(prop, idx, hot_size=1024)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.take(prop, idx, axis=0)), atol=1e-6)
+
+
+def test_hot_gather_cold_capacity_bound():
+    """Bounded cold fixup: capacity >= actual cold count stays exact."""
+    key = jax.random.PRNGKey(2)
+    prop = jax.random.normal(key, (1024, 16))
+    idx = jnp.concatenate([
+        jnp.zeros((3800,), jnp.int32),                      # hot
+        jnp.arange(512, 808, dtype=jnp.int32),              # 296 cold
+    ])
+    out = hg_ops.hot_gather(prop, idx, hot_size=512, cold_capacity=512)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.take(prop, idx, axis=0)), atol=1e-6)
+
+
+def test_fused_gather_segsum_aligned():
+    from repro.graph import generate
+    from repro.kernels.hot_gather.ops import (
+        build_aligned_edges, hot_gather_segsum_aligned)
+
+    g = generate.uniform(9, 6, seed=0)
+    idx_t, seg_t, n_pad = build_aligned_edges(
+        g.indptr, g.indices, seg_per_tile=64, tile_e=512
+    )
+    if idx_t.shape[0] // 512 * 64 != n_pad:
+        pytest.skip("oversized tiles for fused path on this graph")
+    key = jax.random.PRNGKey(0)
+    prop = jax.random.normal(key, (g.num_nodes, 32))
+    out = hot_gather_segsum_aligned(
+        prop, jnp.asarray(idx_t), jnp.asarray(seg_t), n_pad, 64, tile_e=512
+    )
+    rows = jnp.where(
+        jnp.asarray(idx_t)[:, None] >= 0,
+        jnp.take(prop, jnp.asarray(np.maximum(idx_t, 0)), axis=0), 0.0,
+    )
+    ref = jax.ops.segment_sum(rows, jnp.asarray(seg_t), num_segments=n_pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "v,d,b,h,hot",
+    [(2000, 16, 512, 8, 256), (5000, 64, 300, 12, 512), (1000, 100, 64, 4, 1000)],
+)
+def test_hot_bag_sweep(v, d, b, h, hot):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (v, d))
+    ids = jax.random.randint(key, (b, h), 0, v, dtype=jnp.int32)
+    ids = jnp.where(jax.random.uniform(key, (b, h)) < 0.8, ids % hot, ids)
+    mask = jax.random.uniform(key, (b, h)) < 0.9
+    out = eb_ops.hot_bag(table, ids, mask, hot_size=hot)
+    ref = eb_ref.bag_ref(table, ids, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hot_bag_all_masked():
+    key = jax.random.PRNGKey(3)
+    table = jax.random.normal(key, (256, 8))
+    ids = jax.random.randint(key, (32, 4), 0, 256, dtype=jnp.int32)
+    out = eb_ops.hot_bag(table, ids, jnp.zeros((32, 4), bool), hot_size=64)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_hot_lookup_matches_take():
+    key = jax.random.PRNGKey(4)
+    table = jax.random.normal(key, (4096, 64))
+    ids = jax.random.randint(key, (2048,), 0, 4096, dtype=jnp.int32)
+    out = hg_ops.hot_gather(table, ids, hot_size=512)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(eb_ref.lookup_ref(table, ids)), atol=1e-6
+    )

@@ -1,0 +1,71 @@
+"""LLC trace generation: structure, hints, L1 filtering (paper Sec. II-C)."""
+import numpy as np
+import pytest
+
+from repro.core.regions import DEFAULT, HIGH, LOW
+from repro.graph import datasets, traces
+from repro.graph.csr import apply_reorder
+from repro.core.reorder import reorder_ranks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("lj", scale=12)
+    g2 = apply_reorder(g, reorder_ranks(g, "dbg"))
+    llc = datasets.scaled_llc_bytes("lj", g2, elem_bytes=16)
+    tr, plan = traces.generate_trace(g2, "pr", llc)
+    return g2, llc, tr, plan
+
+
+def test_trace_has_all_pc_streams(setup):
+    _, _, tr, _ = setup
+    assert set(np.unique(tr.pc)) == {0, 1, 2, 3}
+
+
+def test_property_gathers_dominate(setup):
+    """Paper Fig. 2: gathers (pc 0) dominate the access stream."""
+    _, _, tr, _ = setup
+    assert (tr.pc == 0).mean() > 0.6
+
+
+def test_hints_match_plan_regions(setup):
+    g2, _, tr, plan = setup
+    # High-hinted accesses are property lines inside the hot byte range
+    hi = tr.line[tr.hint == HIGH] * 64
+    assert hi.max() < plan.hot_size * plan.elem_bytes
+    # streaming arrays (pc 1,2) are always Low-Reuse (paper Sec. III-B)
+    assert np.all(tr.hint[(tr.pc == 1) | (tr.pc == 2)] == LOW)
+
+
+def test_l1_filter_removes_consecutive_dups(setup):
+    _, _, tr, _ = setup
+    for p in range(4):
+        lines = tr.line[tr.pc == p]
+        if lines.size > 1:
+            assert np.all(lines[1:] != lines[:-1]), f"pc{p} has L1-filterable dups"
+
+
+def test_hints_disabled_yields_default(setup):
+    g2, llc, _, _ = setup
+    tr, _ = traces.generate_trace(g2, "pr", llc, hints_enabled=False)
+    assert np.all(tr.hint == DEFAULT)
+
+
+def test_next_use_consistency(setup):
+    _, _, tr, _ = setup
+    rng = np.random.default_rng(0)
+    for t in rng.integers(0, tr.length, 200):
+        nxt = tr.nxt[t]
+        if nxt < tr.length:
+            assert tr.line[nxt] == tr.line[t]
+            # no intermediate occurrence
+            assert not np.any(tr.line[t + 1 : nxt] == tr.line[t])
+
+
+def test_push_direction_uses_out_edges():
+    g = datasets.load("lj", scale=11)
+    llc = 32 * 1024
+    tr_pull, _ = traces.generate_trace(g, "pr", llc)
+    tr_push, _ = traces.generate_trace(g, "sssp", llc)
+    assert tr_pull.length > 0 and tr_push.length > 0
+    assert tr_pull.length != tr_push.length  # different traversals

@@ -1,0 +1,187 @@
+"""Training substrate: optimizers, checkpoint roundtrip + elasticity, FT
+restart bit-exactness, straggler watchdog, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train import compression as comp
+from repro.train import ft as ft_mod
+from repro.train import optimizer as opt_mod
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(name):
+    init, update = opt_mod.make(opt_mod.OptConfig(name=name, lr=0.1,
+                                                  weight_decay=0.0))
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.ones((4, 8)) * 2.0}
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw_bf16_moments_memory():
+    init, _ = opt_mod.make(opt_mod.OptConfig(name="adamw", moment_dtype="bfloat16"))
+    state = init({"w": jnp.zeros((128, 128))})
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_state_is_factored():
+    init, _ = opt_mod.make(opt_mod.OptConfig(name="adafactor"))
+    state = init({"w": jnp.zeros((256, 512))})
+    v = state["v"]["w"]
+    assert v["vr"].shape == (256,) and v["vc"].shape == (512,)
+    # factored state is ~(r+c)/(r*c) of Adam's second moment
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    ckpt_mod.save(str(tmp_path), 7, tree)
+    assert ckpt_mod.latest_step(str(tmp_path)) == 7
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+    out = ckpt_mod.restore(str(tmp_path), None, like)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]), np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt_mod.save(str(tmp_path), s, tree)
+    ckpt_mod.retain(str(tmp_path), keep=2)
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_4", "step_5"]
+    assert ckpt_mod.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto explicit (1-device) shardings — the elastic path."""
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ckpt_mod.save(str(tmp_path), 1, tree)
+    out = ckpt_mod.restore(str(tmp_path), 1, tree, shardings={"w": sh})
+    assert out["w"].sharding == sh
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def _counter_run(tmp_path, fail_at=()):
+    def init_state():
+        return {"x": jnp.zeros((3,)), "steps_seen": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, step):
+        return {
+            "x": state["x"] + step,              # depends on exact step ids
+            "steps_seen": state["steps_seen"] + 1,
+        }
+
+    return ft_mod.run_with_restarts(
+        init_state, step_fn, num_steps=25, ckpt_dir=str(tmp_path),
+        ckpt_every=5, injector=ft_mod.FailureInjector(fail_at=fail_at),
+    )
+
+
+def test_ft_restart_bit_exact(tmp_path):
+    clean = _counter_run(tmp_path / "clean")
+    faulty = _counter_run(tmp_path / "faulty", fail_at=(7, 12, 23))
+    assert faulty.restarts == 3
+    np.testing.assert_array_equal(np.asarray(clean.state["x"]),
+                                  np.asarray(faulty.state["x"]))
+
+
+def test_ft_too_many_failures_raises(tmp_path):
+    with pytest.raises(ft_mod.InjectedFailure):
+        ft_mod.run_with_restarts(
+            lambda: {"x": jnp.zeros(())},
+            lambda s, i: s,
+            num_steps=10,
+            ckpt_dir=str(tmp_path),
+            injector=ft_mod.FailureInjector(fail_at=tuple(range(10))),
+            max_restarts=3,
+        )
+
+
+def test_straggler_watchdog_detects_and_decides():
+    wd = ft_mod.StragglerWatchdog(window=8, threshold=2.0)
+    per_host = np.ones(4)
+    for step in range(20):
+        slow = step in (10, 13, 16)
+        t = 1.0 if not slow else 5.0
+        ph = per_host.copy()
+        if slow:
+            ph[2] = 5.0
+        wd.record(step, t, per_host_seconds=ph)
+    assert len(wd.events) == 3
+    decision = wd.decide()
+    assert decision == {"action": "evict_host", "host": 2,
+                        "then": "elastic_restore"}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256).astype(np.float32)) * 10
+    q, s = comp.quantize_int8(x)
+    err = jnp.abs(comp.dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF carries the residual: the *sum* of transmitted values converges to
+    the sum of true gradients (first-order unbiasedness)."""
+    rng = np.random.default_rng(0)
+    true = [jnp.asarray(rng.standard_normal(64).astype(np.float32))
+            for _ in range(50)]
+    err = {"g": jnp.zeros((64,))}
+    sent_sum = jnp.zeros((64,))
+    true_sum = jnp.zeros((64,))
+    for g in true:
+        (payload, err) = comp.ef_compress({"g": g}, err)
+        q, s = payload["g"]
+        sent_sum = sent_sum + comp.dequantize_int8(q, s)
+        true_sum = true_sum + g
+    # residual error is bounded by one quantization step, not O(T)
+    assert float(jnp.abs(sent_sum - true_sum).max()) < 0.5
+
+
+def test_compressed_psum_inside_shard_map():
+    mesh = jax.make_mesh((1,), ("data",))
+    grads = {"w": jnp.ones((8,)) * 0.37}
+    err = comp.init_error(grads)
+
+    def f(g, e):
+        return comp.compressed_psum(g, e, "data")
+
+    from jax.sharding import PartitionSpec as P
+
+    out, new_err = jax.shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    )(grads, err)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.37, atol=0.01)
