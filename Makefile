@@ -1,0 +1,16 @@
+.PHONY: test quick slow verify
+
+# full tier-1 suite (same command ROADMAP.md documents)
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# quick loop: everything except the multi-minute subprocess tests
+quick:
+	python -m pytest -q -m "not slow"
+
+slow:
+	python -m pytest -q -m slow
+
+# quick suite + the 8-device GRASP exchange equivalence check
+verify:
+	./scripts/verify.sh

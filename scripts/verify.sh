@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the quick (non-slow) suite, then the 8-device GRASP
+# exchange equivalence check in its own process (it must set XLA's host
+# device count before jax initialises).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -q -m "not slow"
+
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python tests/helpers/grasp_gnn_equivalence.py
+
+echo "verify: OK"

@@ -1,0 +1,201 @@
+"""Sharding vocabulary for the launch layer.
+
+Everything here speaks ``jax.sharding.PartitionSpec`` over the mesh axes the
+launch layer uses: ``"pod"`` and ``"data"`` are batch/fsdp axes, ``"model"``
+is tensor parallelism. Specs are written against the *largest* mesh (pod ×
+data × model); ``ns``/``constrain`` silently drop axis names the concrete
+mesh does not have, so the same spec tree works on debug meshes too.
+
+``constrain`` additionally needs an active mesh to do anything — model code
+(e.g. ``nn/transformer.py``) calls it unconditionally, including in
+single-process unit tests where there is no mesh at all, so it degrades to
+identity unless ``set_active_mesh`` has been called (dryrun/train do this
+around lowering).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    """Make `constrain` emit with_sharding_constraint against `mesh`
+    (None disables it again)."""
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes present on this mesh, outermost first."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _filter_entry(names, entry):
+    """Drop mesh-axis names not present on this mesh from one spec entry."""
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a in names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return entry if entry in names else None
+
+
+def ns(mesh: Mesh, *axes) -> NamedSharding:
+    """NamedSharding over `mesh` from spec entries, filtering absent axes.
+
+    ``ns(mesh)`` is fully replicated; entries may be axis names, tuples of
+    axis names, or None, exactly as in PartitionSpec.
+    """
+    names = set(mesh.axis_names)
+    return NamedSharding(mesh, P(*(_filter_entry(names, a) for a in axes)))
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the active mesh; identity if none.
+
+    Besides filtering absent axis names, entries whose combined mesh-axis
+    size does not divide the corresponding dim of `x` are dropped (the
+    debug meshes are frequently larger than a smoke-test batch dim).
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    entries = []
+    for dim, entry in zip(x.shape, axes):
+        entry = _filter_entry(names, entry)
+        if entry is not None:
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in ax:
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                entry = None
+        entries.append(entry)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+# --------------------------------------------------------------------------
+# LM (transformer) specs
+# --------------------------------------------------------------------------
+
+def lm_param_spec(cfg, fsdp: bool = True):
+    """PartitionSpec tree matching the transformer param tree.
+
+    Megatron-style: column-parallel in-projections, row-parallel
+    out-projections over "model"; the non-TP dim is FSDP-sharded over the
+    batch axes when `fsdp`. Layer params are stacked over a leading L dim
+    (replicated). The tree may carry keys absent from a given config
+    (e.g. "wg" on non-gated FFNs) — the launch layer broadcasts spec trees
+    against value trees and ignores extras.
+    """
+    F = ("pod", "data") if fsdp else None
+    col = P(None, F, "model")   # (L, d_in, d_out/TP)
+    row = P(None, "model", F)   # (L, d_in/TP, d_out)
+    layer = {
+        "attn": {"wq": {"w": col}, "wk": {"w": col}, "wv": {"w": col},
+                 "wo": {"w": row}},
+        "ln1": P(),
+        "ln2": P(),
+        "ffn": {"wi": {"w": col}, "wg": {"w": col}, "wo": {"w": row}},
+        "moe": {
+            "router": {"w": P(None, F)},
+            # raw stacked arrays (L, E, d_in, d_out)
+            "wi": P(None, None, F, "model"),
+            "wg": P(None, None, F, "model"),
+            "wo": P(None, None, "model", F),
+        },
+    }
+    return {
+        "embed": P("model", F),
+        "layers": layer,
+        "ln_f": P(),
+        "lm_head": {"w": P(F, "model")},
+    }
+
+
+def opt_state_spec(pspec, opt_name: str):
+    """Optimizer-state spec tree from a param spec tree.
+
+    Momentum-like slots shard exactly as the param; adafactor's factored
+    second moment drops the corresponding reduced dim from the spec.
+    """
+    is_p = lambda x: isinstance(x, P)
+    if opt_name == "sgd":
+        return {"mu": pspec, "step": P()}
+    if opt_name == "adamw":
+        return {"m": pspec, "v": pspec, "step": P()}
+    if opt_name == "adafactor":
+        def second_moment(p):
+            if len(p) < 2:
+                # non-factored (vectors / scalars) -> {"v": ...} only; the
+                # extra keys are harmless: spec trees are broadcast against
+                # value trees key-by-key.
+                return {"v": P(*p), "vr": P(), "vc": P()}
+            return {
+                "vr": P(*p[:-1]),                    # row stats: drop last dim
+                "vc": P(*(tuple(p[:-2]) + (p[-1],))),  # col stats: drop 2nd-last
+                "v": P(*p),
+            }
+        return {"v": jax.tree_util.tree_map(second_moment, pspec, is_leaf=is_p),
+                "step": P()}
+    raise ValueError(f"unknown optimizer {opt_name!r}")
+
+
+def lm_batch_spec(mesh: Mesh):
+    """Token batches shard over the data axes on dim 0."""
+    b = batch_axes(mesh)
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+# --------------------------------------------------------------------------
+# GNN / recsys batch & param specs
+# --------------------------------------------------------------------------
+
+def gnn_batch_spec(mesh: Mesh, kind: str):
+    """Spec-entry tuples (splatted into `ns`) for sharded GNN batch keys.
+
+    Edge arrays shard over every mesh axis; node arrays stay replicated
+    (segment_sum pulls messages back to replicated node tables), so they
+    are simply omitted — the launch layer replicates unlisted keys. `kind`
+    (full_graph / molecule / minibatch) currently shares one layout.
+    """
+    A = tuple(mesh.axis_names)
+    return {"src": (A,), "dst": (A,), "emask": (A,)}
+
+
+def recsys_param_spec(cfg, grasp: bool = False):
+    """MIND param specs: the item table is the only big tensor.
+
+    With `grasp`, the hot rows are replicated (they serve most lookups —
+    the same skew the cache policy exploits) and only the cold table is
+    sharded.
+    """
+    A = ("pod", "data", "model")
+    spec = {"s_mat": P(), "mlp": P()}
+    if grasp:
+        spec["items_hot"] = P()
+        spec["items_cold"] = P(A, None)
+    else:
+        spec["items"] = P(A, None)
+    return spec
+
+
+def recsys_batch_spec(mesh: Mesh, kind: str):
+    b = batch_axes(mesh)
+    A = tuple(mesh.axis_names)
+    if kind == "train":
+        return {"hist": P(b, None), "hist_mask": P(b, None),
+                "target": P(b), "negatives": P()}
+    if kind == "serve":
+        return {"hist": P(b, None), "hist_mask": P(b, None),
+                "candidates": P(b, None)}
+    if kind == "retrieval":
+        return {"hist": P(), "hist_mask": P(), "candidates": P(A)}
+    raise ValueError(f"unknown recsys shape kind {kind!r}")

@@ -45,6 +45,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         bytes_per_dev = None
         if mem is not None:

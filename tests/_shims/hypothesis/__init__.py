@@ -1,0 +1,64 @@
+"""Minimal stand-in for the subset of `hypothesis` this suite uses.
+
+The real dependency is declared in requirements-dev.txt; this shim exists
+because the test container has no package index. tests/conftest.py puts it
+on sys.path only when `import hypothesis` fails, so installing the real
+package transparently takes over (shrinking, the full strategy library,
+the database, ...).
+
+Supported: @given with positional or keyword strategies, @settings
+(max_examples, deadline ignored), strategies.integers / sampled_from /
+booleans / floats. Draws come from a PRNG seeded on the test's qualified
+name, so runs are deterministic; boundary values are drawn first.
+"""
+import functools
+import inspect
+import random
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies"]
+__version__ = "0.0.0.shim"
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_settings = {"max_examples": int(max_examples)}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_shim_settings", None)
+                   or getattr(fn, "_shim_settings", None)
+                   or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(cfg["max_examples"]):
+                drawn = [s.example(rng, first=(i == 0))
+                         for s in arg_strategies]
+                drawn_kw = {k: s.example(rng, first=(i == 0))
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **drawn_kw, **kwargs)
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution: positional strategies fill the RIGHTMOST params
+        # (hypothesis semantics), keyword strategies fill by name.
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        filled = set(kw_strategies)
+        if arg_strategies:
+            filled.update(names[len(names) - len(arg_strategies):])
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for n, p in sig.parameters.items()
+                        if n not in filled])
+        # inspect/pytest would unwrap back to fn (full signature) otherwise
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

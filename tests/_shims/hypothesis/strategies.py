@@ -1,0 +1,54 @@
+"""Strategy objects for the hypothesis shim: each has .example(rng, first).
+
+The first draw of a run returns a boundary value (hypothesis probes edges
+aggressively; cheap imitation, deterministic given the rng).
+"""
+import math
+
+
+class SearchStrategy:
+    def __init__(self, draw, boundary=None):
+        self._draw = draw
+        self._boundary = boundary
+
+    def example(self, rng, first=False):
+        if first and self._boundary is not None:
+            return self._boundary
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              None if self._boundary is None
+                              else f(self._boundary))
+
+
+def integers(min_value, max_value):
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return min_value
+        if r < 0.10:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return SearchStrategy(draw, boundary=min_value)
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: elems[rng.randrange(len(elems))],
+                          boundary=elems[0])
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)),
+                          boundary=False)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+    if not (math.isfinite(lo) and math.isfinite(hi)):
+        raise ValueError("shim floats() needs finite bounds")
+    return SearchStrategy(lambda rng: rng.uniform(lo, hi), boundary=lo)

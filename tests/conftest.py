@@ -5,3 +5,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Fall back to the vendored hypothesis shim only when the real package is
+# missing (this container has no index; requirements-dev.txt declares it).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
+import repro.dist  # noqa: E402,F401  installs jax.set_mesh/jax.shard_map aliases

@@ -1,0 +1,76 @@
+"""grasp_partition edge cases: hot=0 (no-skew robustness), a single device,
+and node counts not divisible by the device count (padding round-trip)."""
+import numpy as np
+
+from repro.core.reorder import reorder_ranks
+from repro.dist import collectives as coll
+from repro.graph import generate
+from repro.graph.csr import apply_reorder, from_edges
+
+
+def _dbg(g):
+    return apply_reorder(g, reorder_ranks(g, "dbg"))
+
+
+def _check_invariants(g, spec, part):
+    kept = part["esrc"][part["emask"]]
+    assert (kept >= 0).all() and (kept < spec.table_len).all()
+    assert (part["edst"][part["emask"]] < spec.n_own).all()
+    assert part["dropped"] == g.num_edges - int(part["emask"].sum())
+
+
+def test_partition_hot_zero_no_skew_graph():
+    """GRASP degrades gracefully when nothing is classified hot: every
+    cross-device source must flow through the halo, and with pub_frac=1
+    nothing drops."""
+    g = generate.uniform(8, 4, seed=3)
+    spec = coll.partition_spec_for(g.num_nodes, g.num_edges, 4, hot=0,
+                                   pub_frac=1.0, edge_slack=4.0)
+    assert spec.hot == 0 and spec.hot_per_dev == 0
+    part = coll.grasp_partition(g, spec)
+    assert part["dropped"] == 0
+    assert int(part["emask"].sum()) == g.num_edges
+    _check_invariants(g, spec, part)
+
+
+def test_partition_single_device_has_no_halo():
+    """P=1: everything is owned locally, so the publish buffers stay empty
+    and no edge can drop regardless of pub_frac."""
+    g = _dbg(generate.rmat(7, 5, seed=4))
+    spec = coll.partition_spec_for(g.num_nodes, g.num_edges, 1, hot=32,
+                                   pub_frac=0.01, edge_slack=1.0)
+    part = coll.grasp_partition(g, spec)
+    assert part["dropped"] == 0
+    assert (part["pub"] == 0).all()
+    assert int(part["emask"].sum()) == g.num_edges
+    _check_invariants(g, spec, part)
+
+
+def test_partition_pads_non_divisible_node_count():
+    """num_nodes % P != 0: the spec pads the cold region up to a full
+    per-device slice and the partition must still cover every edge."""
+    rng = np.random.default_rng(0)
+    n = 1013  # prime: not divisible by 8
+    src = rng.integers(0, n, 6000)
+    dst = rng.integers(0, n, 6000)
+    g = from_edges(src, dst, n)
+    spec = coll.partition_spec_for(g.num_nodes, g.num_edges, 8, hot=64,
+                                   pub_frac=1.0, edge_slack=4.0)
+    assert spec.num_nodes >= n
+    assert spec.hot + spec.num_devices * spec.cold_per_dev == spec.num_nodes
+    assert spec.num_nodes % spec.num_devices == 0 or spec.hot % spec.num_devices == 0
+    part = coll.grasp_partition(g, spec)
+    assert part["dropped"] == 0
+    assert int(part["emask"].sum()) == g.num_edges
+    _check_invariants(g, spec, part)
+
+
+def test_partition_tight_caps_account_exactly():
+    """Undersized halo/edge budgets MAY drop edges, but the bookkeeping and
+    the static capacity bounds must hold exactly."""
+    g = _dbg(generate.rmat(8, 8, seed=5))
+    spec = coll.partition_spec_for(g.num_nodes, g.num_edges, 4, hot=32,
+                                   pub_frac=0.05, edge_slack=0.5)
+    part = coll.grasp_partition(g, spec)
+    _check_invariants(g, spec, part)
+    assert int((part["pub"] > 0).sum()) <= spec.num_devices * spec.c_pub
