@@ -1,4 +1,4 @@
-.PHONY: test quick slow verify
+.PHONY: test quick slow verify serve-smoke
 
 # full tier-1 suite (same command ROADMAP.md documents)
 test:
@@ -11,6 +11,12 @@ quick:
 slow:
 	python -m pytest -q -m slow
 
-# quick suite + the 8-device GRASP exchange equivalence check
+# quick suite + the 8-device GRASP exchange equivalence check + serve smoke
 verify:
 	./scripts/verify.sh
+
+# end-to-end repro.serve check on a zipf stream (non-tier-1): GRASP cache
+# must beat the unpinned baselines and shed-load must bound p99; emits
+# BENCH_serve.json
+serve-smoke:
+	PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json

@@ -10,4 +10,8 @@ python -m pytest -q -m "not slow"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python tests/helpers/grasp_gnn_equivalence.py
 
+# non-tier-1: serving subsystem end-to-end smoke (GRASP cache vs unpinned
+# baselines + shed-load p99 bound); emits BENCH_serve.json
+PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
+
 echo "verify: OK"

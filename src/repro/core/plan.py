@@ -33,6 +33,28 @@ VMEM_BYTES = 128 * 1024 * 1024
 DEFAULT_VMEM_FRACTION = 0.5
 
 
+def entries_for_budget(
+    budget_bytes: int,
+    elem_bytes: int,
+    align: int = 1,
+    max_entries: Optional[int] = None,
+) -> int:
+    """How many ``elem_bytes``-sized rows fit a fast-memory byte budget.
+
+    The one bytes->entries conversion shared by every residency tier: the
+    kernel plan (``make_plan``), the distributed hot-replica sizing
+    (``dist.collectives.partition_spec_for``) and the serving cache
+    (``serve.cache``). ``align`` rounds down to a multiple (tile-aligned
+    hot blocks); ``max_entries`` clamps to the table length.
+    """
+    n = max(int(budget_bytes), 0) // max(int(elem_bytes), 1)
+    if max_entries is not None:
+        n = min(n, int(max_entries))
+    if align > 1:
+        n -= n % align
+    return int(n)
+
+
 @dataclasses.dataclass(frozen=True)
 class GraspPlan:
     num_elems: int          # Property Array length (vertices / table rows)
@@ -88,9 +110,8 @@ def make_plan(
     if budget_bytes is None:
         budget_bytes = int(VMEM_BYTES * DEFAULT_VMEM_FRACTION)
     per_array = budget_bytes // max(num_arrays, 1)
-    hot = min(per_array // elem_bytes, num_elems)
-    if align > 1:
-        hot = (hot // align) * align
+    hot = entries_for_budget(per_array, elem_bytes, align=align,
+                             max_entries=num_elems)
     mod = min(per_array // elem_bytes, num_elems - hot)
     return GraspPlan(
         num_elems=int(num_elems),

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +28,14 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PSpec
 
+from repro.core import plan as plan_mod
 from repro.nn import gnn as gnn_mod
 from repro.nn import layers as L
+
+# Per-device HBM each replica spends on the shared hot prefix. 64MB out of
+# a v5e-class 16GB keeps replication cost <0.5% of device memory while
+# covering the paper's Table I hot sets at 4B/elem.
+HOT_REPLICA_BUDGET_BYTES = 64 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,9 +62,17 @@ class GraspPartitionSpec:
 
 
 def partition_spec_for(num_nodes: int, num_edges: int, num_devices: int,
-                       hot: int, pub_frac: float = 0.25,
-                       edge_slack: float = 1.5) -> GraspPartitionSpec:
+                       hot: Optional[int] = None, pub_frac: float = 0.25,
+                       edge_slack: float = 1.5,
+                       hot_budget_bytes: Optional[int] = None,
+                       elem_bytes: int = 4) -> GraspPartitionSpec:
     """Size the static buffers for a `num_devices`-way GRASP partition.
+
+    `hot` may be given directly (tests / ablations) or derived from a real
+    per-device memory budget: with `hot=None`, the replicated hot prefix is
+    sized as `entries_for_budget(hot_budget_bytes, elem_bytes)` — the bytes
+    each device can afford to spend on the replica, divided by the feature
+    row size (`HOT_REPLICA_BUDGET_BYTES` when unspecified).
 
     `hot` is rounded down to a multiple of `num_devices`; the cold remainder
     is padded up so every device owns exactly `cold_per_dev` cold nodes.
@@ -68,6 +82,11 @@ def partition_spec_for(num_nodes: int, num_edges: int, num_devices: int,
     """
     if num_devices < 1:
         raise ValueError("need at least one device")
+    if hot is None:
+        budget = (HOT_REPLICA_BUDGET_BYTES if hot_budget_bytes is None
+                  else hot_budget_bytes)
+        hot = plan_mod.entries_for_budget(budget, elem_bytes,
+                                          max_entries=num_nodes)
     hot = int(max(0, min(hot, num_nodes)))
     hot -= hot % num_devices
     hot_per_dev = hot // num_devices

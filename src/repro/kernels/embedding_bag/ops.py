@@ -7,6 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.core.plan import GraspPlan
 from repro.kernels.embedding_bag.embedding_bag import hot_bag_hot_part
 from repro.kernels.hot_gather.ops import hot_gather
@@ -17,7 +18,15 @@ LANE = 128
 def hot_lookup(table: jnp.ndarray, ids: jnp.ndarray,
                plan: Optional[GraspPlan] = None, interpret: bool = True):
     """(V,d) x (B,) -> (B,d); hot prefix from VMEM, cold fixup bounded."""
-    hot_size = plan.hot_size if plan is not None else min(table.shape[0], 1 << 18)
+    if plan is not None:
+        hot_size = plan.hot_size
+    else:
+        # default: the VMEM-budget share of the table (== 2^18 rows at d=64)
+        hot_size = plan_mod.entries_for_budget(
+            int(plan_mod.VMEM_BYTES * plan_mod.DEFAULT_VMEM_FRACTION),
+            table.shape[1] * table.dtype.itemsize,
+            max_entries=table.shape[0],
+        )
     return hot_gather(table, ids, hot_size=hot_size, interpret=interpret)
 
 

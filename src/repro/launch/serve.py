@@ -1,66 +1,86 @@
-"""Batched serving driver: prefill + decode loop with continuous batching.
+"""Serving CLI — a thin front-end over ``repro.serve.engine``.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b --smoke \
-        --requests 16 --prefill 64 --decode 32
+    # transformer prefill+decode loop (the original driver, partial
+    # batches fixed):
+    PYTHONPATH=src python -m repro.launch.serve --engine lm \
+        --arch starcoder2-7b --requests 16 --prefill 64 --decode 32
 
-Serves the reduced config on CPU; the full configs' serving steps are the
-decode/prefill dry-run cells.
+    # MIND candidate scoring through the GRASP embedding cache on a
+    # zipf-skewed stream with deadlines + shed load:
+    PYTHONPATH=src python -m repro.launch.serve --engine recsys \
+        --requests 256 --qps 2000 --budget-kb 256 --json /tmp/serve.json
+
+All real logic lives in ``repro.serve``; this module only parses flags and
+prints/emits the metrics snapshot.
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import base as cfgs
-from repro.data.pipeline import zipf_ids
-from repro.nn import transformer as tfm
+import json
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="starcoder2-7b")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", choices=("lm", "recsys"), default="lm")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
+    # lm flags
+    ap.add_argument("--arch", default="starcoder2-7b")
     ap.add_argument("--prefill", type=int, default=64)
     ap.add_argument("--decode", type=int, default=32)
+    # recsys flags
+    ap.add_argument("--qps", type=float, default=2000.0)
+    ap.add_argument("--budget-kb", type=int, default=256,
+                    help="device cache budget for the embedding cache")
+    ap.add_argument("--hot-frac", type=float, default=0.5,
+                    help="share of the budget pinned (0 = unpinned baseline)")
+    ap.add_argument("--policy", choices=("rrpv", "lru"), default="rrpv")
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--candidates", type=int, default=32)
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--json", default=None, help="write metrics snapshot here")
     args = ap.parse_args(argv)
 
-    cfg = cfgs.get_arch(args.arch)
+    if args.engine == "lm":
+        from repro.serve.engine import lm_loop
+
+        return lm_loop(arch=args.arch, smoke=args.smoke,
+                       requests=args.requests, batch=args.batch,
+                       prefill=args.prefill, decode=args.decode)
+
+    from repro.configs import base as cfgs
+    from repro.serve.cache import CacheConfig
+    from repro.serve.engine import StreamConfig, run_recsys_stream
+    from repro.serve.scheduler import SchedulerConfig
+
+    cfg = cfgs.get_arch("mind")
     if args.smoke:
         cfg = cfgs.reduced(cfg)
-    rng = np.random.default_rng(0)
-    max_len = args.prefill + args.decode
-
-    params = tfm.init(jax.random.PRNGKey(0), cfg)
-    prefill = jax.jit(lambda p, t: tfm.prefill(p, cfg, t, max_len=max_len))
-    decode = jax.jit(lambda p, c, t: tfm.decode_step(p, cfg, c, t))
-
-    done, t0 = 0, time.time()
-    lat = []
-    while done < args.requests:
-        n = min(args.batch, args.requests - done)
-        tokens = zipf_ids(rng, (args.batch, args.prefill), cfg.vocab)
-        t1 = time.time()
-        logits, cache = prefill(params, jnp.asarray(tokens))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out = [tok]
-        for _ in range(args.decode - 1):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(tok)
-        jax.block_until_ready(out[-1])
-        lat.append(time.time() - t1)
-        done += n
-    dt = time.time() - t0
-    toks = args.requests * args.decode
-    print(f"[serve] {args.requests} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s); batch latency p50="
-          f"{np.percentile(lat, 50)*1e3:.0f}ms p99={np.percentile(lat, 99)*1e3:.0f}ms")
+    snap = run_recsys_stream(
+        cfg,
+        CacheConfig(budget_bytes=args.budget_kb << 10,
+                    hot_fraction=args.hot_frac, policy=args.policy),
+        SchedulerConfig(max_batch=args.batch, max_queue=args.max_queue,
+                        default_deadline_s=args.deadline_ms / 1e3),
+        StreamConfig(requests=args.requests, qps=args.qps,
+                     candidates=args.candidates, zipf_a=args.zipf_a,
+                     deadline_s=args.deadline_ms / 1e3),
+    )
+    c, lat = snap["counters"], snap["latency"]
+    e2e = lat.get("e2e", {})
+    print(f"[serve:recsys] {c.get('completed', 0)}/{snap['config']['requests']}"
+          f" served, shed={c.get('shed', 0)} rejected={c.get('rejected', 0)}; "
+          f"cache hit={snap['hit_rate']:.1%} "
+          f"(hot={c.get('hot_hits', 0)} cold={c.get('cold_hits', 0)} "
+          f"miss={c.get('misses', 0)}); "
+          f"e2e p50={e2e.get('p50_s', 0)*1e3:.1f}ms "
+          f"p99={e2e.get('p99_s', 0)*1e3:.1f}ms")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+    return snap
 
 
 if __name__ == "__main__":

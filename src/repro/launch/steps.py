@@ -324,7 +324,9 @@ def _gnn_grasp_cell(cfg, shape, mesh) -> Cell:
     opt_cfg = opt_mod.OptConfig(name="adamw", lr=1e-3)
     opt_init, opt_update = opt_mod.make(opt_cfg)
     spec = coll.partition_spec_for(
-        shape.n_nodes, shape.n_edges, mesh.size, hot=1 << 18
+        shape.n_nodes, shape.n_edges, mesh.size,
+        hot_budget_bytes=coll.HOT_REPLICA_BUDGET_BYTES,
+        elem_bytes=shape.d_feat * 4,
     )
     step, batch_specs = coll.make_grasp_gin_step(
         spec, cfg, shape.d_feat, N_CLASSES, mesh, opt_update
@@ -397,7 +399,11 @@ def grasp_hot_rows(cfg, mesh) -> int:
     fast-memory budget (replication cost) and shardability of the tail."""
     if not cfg.grasp:
         return 0
-    budget_rows = (64 << 20) // (cfg.embed_dim * 4)  # 64MB replica budget
+    from repro.core import plan as plan_mod
+
+    budget_rows = plan_mod.entries_for_budget(
+        64 << 20, cfg.embed_dim * 4  # 64MB replica budget
+    )
     hot = 1 << (budget_rows.bit_length() - 1)
     # cold remainder must shard over 512 chips
     while hot > 0 and (cfg.n_items - hot) % 512 != 0:

@@ -112,12 +112,21 @@ def user_interests(params, cfg: RecsysConfig, hist: jnp.ndarray,
 
     Dynamic routing (capsule_iters rounds) with fixed random-ish init
     logits derived from item ids (deterministic, matches MIND's B2I)."""
-    b, hlen = hist.shape
-    d, k = cfg.embed_dim, cfg.n_interests
     if impl == "jnp":
         e = table_lookup(params, hist)                               # (B, H, d)
     else:
         e = embedding_lookup(params["items"], hist, impl, plan)
+    return user_interests_from_emb(params, cfg, e, hist, hist_mask)
+
+
+def user_interests_from_emb(params, cfg: RecsysConfig, e: jnp.ndarray,
+                            hist: jnp.ndarray, hist_mask: jnp.ndarray):
+    """Routing from pre-gathered history embeddings ``e`` (B, H, d).
+
+    The serving tier (``repro.serve``) gathers ``e`` through its
+    GRASP-managed embedding cache and hands it here, so the capsule math is
+    shared between the parameter-table and cache-fed paths."""
+    k = cfg.n_interests
     e = jnp.where(hist_mask[..., None], e, 0.0)
     eh = jnp.einsum("bhd,de->bhe", e, params["s_mat"])           # bilinear map
 
@@ -137,6 +146,13 @@ def user_interests(params, cfg: RecsysConfig, hist: jnp.ndarray,
     h = L.dense(params["mlp"][0], interests, jnp.float32)
     h = jax.nn.relu(h)
     return interests + L.dense(params["mlp"][1], h, jnp.float32)
+
+
+def score_candidates(interests: jnp.ndarray, cand_emb: jnp.ndarray):
+    """(B, K, d) interests x (B, C, d) candidates -> (B, C) max-over-interest
+    scores (MIND serving reduction)."""
+    scores = jnp.einsum("bkd,bcd->bkc", interests, cand_emb)
+    return scores.max(axis=1)
 
 
 def label_aware_attention(interests, target_emb, p: float = 2.0):
@@ -173,8 +189,7 @@ def serve_scores(params, cfg: RecsysConfig, batch: Dict, impl: str = "jnp",
     interests = user_interests(params, cfg, batch["hist"], batch["hist_mask"],
                                impl, plan)
     cand = table_lookup(params, batch["candidates"])               # (B, C, d)
-    scores = jnp.einsum("bkd,bcd->bkc", interests, cand)
-    return scores.max(axis=1)                                      # (B, C)
+    return score_candidates(interests, cand)                       # (B, C)
 
 
 def retrieval_scores(params, cfg: RecsysConfig, batch: Dict, impl: str = "jnp",

@@ -1,0 +1,29 @@
+"""repro.serve — GRASP-managed embedding cache + continuous-batching
+inference subsystem.
+
+The online tier of the reproduction: ``cache`` (two-region GRASP embedding
+cache), ``scheduler`` (continuous batching, admission control, deadlines,
+shed load), ``metrics`` (hit/latency accounting + JSON snapshots) and
+``engine`` (recsys/GNN/LM serving drivers). See README.md in this
+directory for the architecture.
+"""
+from repro.serve.cache import CacheConfig, EmbeddingCache, LookupStats
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.scheduler import (
+    ContinuousBatcher,
+    Request,
+    SchedulerConfig,
+    VirtualClock,
+)
+
+__all__ = [
+    "CacheConfig",
+    "EmbeddingCache",
+    "LookupStats",
+    "LatencyHistogram",
+    "ServeMetrics",
+    "ContinuousBatcher",
+    "Request",
+    "SchedulerConfig",
+    "VirtualClock",
+]

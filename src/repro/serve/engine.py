@@ -1,0 +1,349 @@
+"""Serving engines: cache + scheduler wired to the nn forward paths.
+
+``RecsysServeEngine`` serves MIND candidate-scoring requests: history and
+candidate item embeddings are gathered through the GRASP
+``EmbeddingCache`` and fed to the shared capsule-routing math
+(``nn.recsys.user_interests_from_emb`` / ``score_candidates``).
+
+``GNNServeEngine`` serves node-classification requests: seed nodes are
+expanded by the fanout sampler, node features are gathered through the
+cache (degree-ordered table => hot prefix = high-degree nodes, the paper's
+High Reuse Region), and the GIN forward runs on the padded block graph.
+
+Both engines pad partial batches up to ``max_batch`` *after* the cache
+lookup, so jit sees one static shape (no per-batch-size recompiles) while
+the cache only ever sees real references.
+
+``lm_loop`` is the transformer prefill+decode driver that used to live in
+``launch/serve.py``, kept as the third engine behind the same CLI. Its
+final partial batch now computes exactly the remaining ``n`` sequences
+(one extra jit specialisation) instead of padding work up to ``batch`` and
+misreporting tok/s.
+
+``run_recsys_stream`` drives a full closed-loop run on a zipf request
+stream against a virtual clock — the entry point `make serve-smoke` and
+the CLI share.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig, RecsysConfig
+from repro.data.pipeline import zipf_ids
+from repro.nn import gnn as gnn_mod
+from repro.nn import recsys as recsys_mod
+from repro.serve.cache import CacheConfig, EmbeddingCache
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (
+    ContinuousBatcher,
+    Request,
+    SchedulerConfig,
+    VirtualClock,
+)
+
+
+def _pad_batch(arrs: List[np.ndarray], width: int) -> np.ndarray:
+    """Stack per-request arrays and zero-pad the batch dim to ``width``."""
+    x = np.stack(arrs)
+    if x.shape[0] < width:
+        pad = [(0, width - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        x = np.pad(x, pad)
+    return x
+
+
+class _EngineBase:
+    """Shared continuous-batching pump.
+
+    ``step`` claims a batch, runs ``forward``, and — when the scheduler
+    clock is a ``VirtualClock`` — advances it by the measured forward wall
+    time (or a deterministic ``service_model(batch_size)``) before
+    completion, so virtual-time latency accounting includes service time.
+    """
+
+    batcher: ContinuousBatcher
+    service_model = None  # Optional[Callable[[int], float]]
+
+    def submit(self, payload: Dict, deadline_s: Optional[float] = None) -> Request:
+        return self.batcher.submit(payload, deadline_s)
+
+    def forward(self, payloads: List[Dict]) -> np.ndarray:
+        raise NotImplementedError
+
+    def step(self) -> int:
+        """Run one continuous-batching iteration; returns batch size."""
+        batch = self.batcher.next_batch()
+        if not batch:
+            return 0
+        t0 = time.perf_counter()
+        results = self.forward([r.payload for r in batch])
+        dt = time.perf_counter() - t0
+        clock = self.batcher.clock
+        if isinstance(clock, VirtualClock):
+            if self.service_model is not None:
+                dt = self.service_model(len(batch))
+            clock.advance(dt)
+        self.batcher.complete(batch, list(results))
+        return len(batch)
+
+    def run_until_idle(self) -> None:
+        while self.step():
+            pass
+
+
+class RecsysServeEngine(_EngineBase):
+    """MIND candidate scoring over the GRASP embedding cache.
+
+    Request payload: ``{"hist": (H,), "hist_mask": (H,), "candidates":
+    (C,)}``; result: ``(C,)`` float32 scores. ``params`` must hold a dense
+    ``items`` table — the cache becomes the only reader of it.
+    """
+
+    def __init__(
+        self,
+        params: Dict,
+        cfg: RecsysConfig,
+        cache_config: CacheConfig,
+        sched_config: SchedulerConfig,
+        metrics: Optional[ServeMetrics] = None,
+        clock=time.monotonic,
+        service_model=None,
+    ) -> None:
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.params = {k: v for k, v in params.items() if k != "items"}
+        self.cache = EmbeddingCache(
+            np.asarray(params["items"]), cache_config, metrics=self.metrics
+        )
+        self.batcher = ContinuousBatcher(sched_config, clock=clock,
+                                         metrics=self.metrics)
+        self._width = sched_config.max_batch
+        self.service_model = service_model
+
+        def routed(p, e, hist, mask, cand_e):
+            interests = recsys_mod.user_interests_from_emb(p, cfg, e, hist, mask)
+            return recsys_mod.score_candidates(interests, cand_e)
+
+        self._routed = jax.jit(routed)
+
+    def forward(self, payloads: List[Dict]) -> np.ndarray:
+        """Score a list of request payloads; returns (n, C)."""
+        n = len(payloads)
+        hist = np.stack([p["hist"] for p in payloads])
+        cand = np.stack([p["candidates"] for p in payloads])
+        e, _ = self.cache.lookup(hist.reshape(-1))
+        ce, _ = self.cache.lookup(cand.reshape(-1))
+        e = np.asarray(e).reshape(hist.shape + (self.cache.dim,))
+        ce = np.asarray(ce).reshape(cand.shape + (self.cache.dim,))
+        w = self._width
+        scores = self._routed(
+            self.params,
+            jnp.asarray(_pad_batch(list(e), w)),
+            jnp.asarray(_pad_batch([p["hist"] for p in payloads], w)),
+            jnp.asarray(_pad_batch([p["hist_mask"] for p in payloads], w)),
+            jnp.asarray(_pad_batch(list(ce), w)),
+        )
+        return np.asarray(jax.block_until_ready(scores))[:n]
+
+
+class GNNServeEngine(_EngineBase):
+    """GIN node-classification serving over a cached node-feature table.
+
+    Request payload: ``{"seeds": (S,)}`` with exactly ``seeds_per_req``
+    seed node ids; result: ``(S, n_classes)`` logits. The feature table is
+    degree-ordered so the cache's pinned prefix covers the hub nodes every
+    sampled block touches.
+    """
+
+    def __init__(
+        self,
+        params: Dict,
+        cfg: GNNConfig,
+        graph,                       # graph.csr.CSR, degree-ordered ids
+        features: np.ndarray,        # (N, F) node-feature table
+        cache_config: CacheConfig,
+        sched_config: SchedulerConfig,
+        fanout=(5, 5),
+        seeds_per_req: int = 4,
+        metrics: Optional[ServeMetrics] = None,
+        clock=time.monotonic,
+        seed: int = 0,
+        service_model=None,
+    ) -> None:
+        self.cfg = cfg
+        self.graph = graph
+        self.fanout = tuple(fanout)
+        self.seeds_per_req = seeds_per_req
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.params = params
+        self.cache = EmbeddingCache(
+            features, cache_config,
+            degree=np.asarray(graph.out_degree), metrics=self.metrics,
+        )
+        self.batcher = ContinuousBatcher(sched_config, clock=clock,
+                                         metrics=self.metrics)
+        self._width = sched_config.max_batch
+        self._rng = np.random.default_rng(seed)
+        self.service_model = service_model
+        self._apply = jax.jit(
+            lambda p, batch: gnn_mod.apply(p, cfg, batch)
+        )
+
+    def forward(self, payloads: List[Dict]) -> np.ndarray:
+        from repro.graph import sampler
+
+        n = len(payloads)
+        seeds = np.concatenate([np.asarray(p["seeds"]) for p in payloads])
+        pad_seeds = (self._width - n) * self.seeds_per_req
+        if pad_seeds:
+            seeds = np.pad(seeds, (0, pad_seeds))  # node 0: hottest, harmless
+        blocks = sampler.sample_blocks(self.graph, seeds, self.fanout, self._rng)
+        logits = self.forward_blocks(blocks)
+        per_req = logits[: n * self.seeds_per_req]
+        return per_req.reshape(n, self.seeds_per_req, -1)
+
+    def forward_blocks(self, blocks) -> np.ndarray:
+        """Seed-node logits for one sampled block graph (cache-fed gather)."""
+        x, _ = self.cache.lookup(blocks.node_ids)
+        x = jnp.where(jnp.asarray(blocks.node_mask)[:, None], x, 0.0)
+        batch = {
+            "x": x,
+            "src": jnp.asarray(blocks.src),
+            "dst": jnp.asarray(blocks.dst),
+            "emask": jnp.asarray(blocks.emask),
+        }
+        out = jax.block_until_ready(self._apply(self.params, batch))
+        return np.asarray(out)[blocks.seeds_local]
+
+
+# ---------------------------------------------------------------------------
+# LM prefill+decode loop (moved from launch/serve.py; partial batches fixed)
+# ---------------------------------------------------------------------------
+def lm_loop(arch: str = "starcoder2-7b", smoke: bool = True, requests: int = 16,
+            batch: int = 8, prefill: int = 64, decode: int = 32) -> Dict:
+    """Batched prefill+decode serving loop for the transformer archs.
+
+    The final batch computes exactly the remaining ``n`` sequences (at the
+    cost of one extra jit specialisation) and the report counts only
+    tokens actually served — a partial batch no longer inflates tok/s or
+    batch latency with padded work.
+    """
+    from repro.configs import base as cfgs
+    from repro.nn import transformer as tfm
+
+    cfg = cfgs.get_arch(arch)
+    if smoke:
+        cfg = cfgs.reduced(cfg)
+    rng = np.random.default_rng(0)
+    max_len = prefill + decode
+
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    prefill_fn = jax.jit(lambda p, t: tfm.prefill(p, cfg, t, max_len=max_len))
+    decode_fn = jax.jit(lambda p, c, t: tfm.decode_step(p, cfg, c, t))
+
+    done, toks_served, t0 = 0, 0, time.time()
+    lat = []
+    while done < requests:
+        n = min(batch, requests - done)
+        tokens = zipf_ids(rng, (n, prefill), cfg.vocab)
+        t1 = time.time()
+        logits, cache = prefill_fn(params, jnp.asarray(tokens))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(decode - 1):
+            logits, cache = decode_fn(params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        lat.append(time.time() - t1)
+        done += n
+        toks_served += n * decode
+    dt = time.time() - t0
+    stats = {
+        "requests": requests,
+        "tokens": toks_served,
+        "tok_s": toks_served / dt,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+    }
+    print(f"[serve] {requests} requests, {toks_served} tokens in {dt:.2f}s "
+          f"({stats['tok_s']:.1f} tok/s); batch latency p50="
+          f"{stats['p50_ms']:.0f}ms p99={stats['p99_ms']:.0f}ms")
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop zipf stream driver (CLI + `make serve-smoke`)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    requests: int = 256
+    qps: float = 2000.0            # offered load (virtual-time arrivals)
+    candidates: int = 32
+    zipf_a: float = 1.1
+    deadline_s: Optional[float] = 0.05
+    seed: int = 0
+
+
+def run_recsys_stream(
+    cfg: RecsysConfig,
+    cache_config: CacheConfig,
+    sched_config: SchedulerConfig,
+    stream: StreamConfig,
+    params: Optional[Dict] = None,
+    service_time_s: Optional[float] = None,
+) -> Dict:
+    """Drive a zipf-skewed request stream through a fresh engine.
+
+    Arrivals follow a deterministic uniform process at ``stream.qps`` on a
+    virtual clock; each batch advances the clock by the *measured* forward
+    wall time (or ``service_time_s`` for fully deterministic runs). Returns
+    the metrics snapshot, including cache hit rates and latency tails.
+    """
+    if params is None:
+        params = recsys_mod.init(jax.random.PRNGKey(0), cfg)
+    clock = VirtualClock()
+    service_model = (None if service_time_s is None
+                     else (lambda n: service_time_s))
+    engine = RecsysServeEngine(params, cfg, cache_config, sched_config,
+                               clock=clock, service_model=service_model)
+    rng = np.random.default_rng(stream.seed)
+    arrivals = np.arange(stream.requests) / stream.qps
+    payloads = []
+    for _ in range(stream.requests):
+        hist = zipf_ids(rng, (cfg.hist_len,), cfg.n_items, a=stream.zipf_a)
+        cand = zipf_ids(rng, (stream.candidates,), cfg.n_items, a=stream.zipf_a)
+        payloads.append({
+            "hist": hist,
+            "hist_mask": np.ones(cfg.hist_len, bool),
+            "candidates": cand,
+        })
+
+    i = 0
+    while i < stream.requests or engine.batcher.depth:
+        while i < stream.requests and arrivals[i] <= clock():
+            engine.submit(payloads[i], deadline_s=stream.deadline_s)
+            i += 1
+        if not engine.batcher.depth:
+            clock.advance_to(arrivals[i])
+            continue
+        engine.step()
+    snap = engine.metrics.snapshot()
+    snap["config"] = {
+        "budget_bytes": cache_config.budget_bytes,
+        "hot_fraction": cache_config.hot_fraction,
+        "policy": cache_config.policy,
+        "hot_size": engine.cache.hot_size,
+        "cold_slots": engine.cache.cold_slots,
+        "max_batch": sched_config.max_batch,
+        "max_queue": sched_config.max_queue,
+        "qps": stream.qps,
+        "deadline_s": stream.deadline_s,
+        "requests": stream.requests,
+    }
+    return snap
