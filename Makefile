@@ -1,4 +1,4 @@
-.PHONY: test quick slow verify serve-smoke
+.PHONY: test quick slow verify serve-smoke gateway-smoke gateway
 
 # full tier-1 suite (same command ROADMAP.md documents)
 test:
@@ -20,3 +20,14 @@ verify:
 # BENCH_serve.json
 serve-smoke:
 	PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
+
+# loopback load test of the repro.gateway RPC front-end (non-tier-1):
+# closed-loop hit rate over real sockets + 2x-overload open loop with the
+# shed-load tail bound and 503-retry recovery; emits BENCH_gateway.json
+gateway-smoke:
+	PYTHONPATH=src python -m benchmarks.gateway_smoke --out BENCH_gateway.json
+
+# launch the gateway for manual poking (recsys engine on :8077):
+#   curl -s -XPOST localhost:8077/v1/score -d '{"hist":[1,2,3],"candidates":[4,5]}'
+gateway:
+	PYTHONPATH=src python -m repro.launch.serve --engine recsys --gateway 127.0.0.1:8077

@@ -1,0 +1,293 @@
+"""`make gateway-smoke` — loopback load test of the repro.gateway subsystem.
+
+Unlike `serve_smoke` (virtual clock, single thread), everything here runs
+over real threads and real TCP sockets on localhost, so the GRASP serving
+claims are re-checked under true concurrency:
+
+1. **closed loop** — worker threads drive the zipf stream from
+   `serve_smoke` through `/v1/score`; every request must come back done,
+   and the GRASP cache hit rate must stay >= the *unpinned* baseline
+   recorded in ``BENCH_serve.json`` (re-derived on a virtual clock when
+   the file is absent).
+2. **open loop, 2x overload** — a deterministically paced engine (fixed
+   batch service time) is offered twice its capacity with deadlines
+   attached. Asserts the scheduler's bound survives sockets: no *served*
+   request exceeds ``deadline + one batch service time``; every submitted
+   request resolves (done/shed/rejected — zero hangs, conservation is
+   checked server-side too); and the client's bounded-backoff retries
+   recover at least one request through transient 503s.
+
+Emits both phases plus a verdict to ``BENCH_gateway.json``.
+
+    PYTHONPATH=src python -m benchmarks.gateway_smoke [--out BENCH_gateway.json]
+
+Non-tier-1: wired into scripts/verify.sh after serve_smoke (which
+produces the baseline file it reads). Wall-clock is bounded: every join
+carries a timeout and the phases offer finite load.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import base as cfgs
+from repro.data.pipeline import zipf_ids
+from repro.gateway import GatewayClient, GatewayError, GatewayServer
+from repro.gateway.pump import EnginePump
+from repro.serve.cache import CacheConfig
+from repro.serve.engine import RecsysServeEngine
+from repro.serve.scheduler import SchedulerConfig
+
+CANDIDATES = 16
+ZIPF_A = 1.1
+CACHE_ROWS = 128           # same capacity as serve_smoke: 128 of 1000 rows
+JOIN_TIMEOUT_S = 120.0     # hard bound on any phase's wall clock
+
+
+class PacedRecsysEngine(RecsysServeEngine):
+    """Recsys engine whose forward is padded to a fixed wall time, so the
+    overload phase has a deterministic capacity (batch/pace_s rps) on any
+    host — the real model forward still runs first."""
+
+    def __init__(self, *args, pace_s: float = 0.0, **kw) -> None:
+        super().__init__(*args, **kw)
+        self.pace_s = float(pace_s)
+
+    def forward(self, payloads):
+        t0 = time.monotonic()
+        out = super().forward(payloads)
+        left = self.pace_s - (time.monotonic() - t0)
+        if left > 0:
+            time.sleep(left)
+        return out
+
+
+def _make_engine(pace_s: float, sched: SchedulerConfig) -> PacedRecsysEngine:
+    import jax
+    from repro.nn import recsys as recsys_mod
+
+    cfg = cfgs.reduced(cfgs.get_arch("mind"))   # 1000 items, d=16
+    params = recsys_mod.init(jax.random.PRNGKey(0), cfg)
+    eng = PacedRecsysEngine(
+        params, cfg,
+        CacheConfig(budget_bytes=CACHE_ROWS * cfg.embed_dim * 4,
+                    hot_fraction=0.5, policy="rrpv", tile_e=128),
+        sched, pace_s=pace_s)
+    eng.warmup(candidates=CANDIDATES)
+    return eng
+
+
+def _payloads(cfg, n: int, seed: int = 0):
+    """Same draw order as serve_smoke's stream: hist then candidates."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        out.append({
+            "hist": zipf_ids(rng, (cfg.hist_len,), cfg.n_items, a=ZIPF_A),
+            "candidates": zipf_ids(rng, (CANDIDATES,), cfg.n_items, a=ZIPF_A),
+        })
+    return out
+
+
+def _unpinned_baseline(out_dir: str = ".") -> float:
+    """Best unpinned hit rate: read BENCH_serve.json, else re-derive it on
+    the virtual clock exactly as serve_smoke does."""
+    path = os.path.join(out_dir, "BENCH_serve.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            runs = json.load(f)["hit_rate_comparison"]
+        return max(runs["baseline_rrpv"]["hit_rate"],
+                   runs["baseline_lru"]["hit_rate"])
+    from repro.serve.engine import StreamConfig, run_recsys_stream
+
+    cfg = cfgs.reduced(cfgs.get_arch("mind"))
+    budget = CACHE_ROWS * cfg.embed_dim * 4
+    sched = SchedulerConfig(max_batch=8, max_queue=64)
+    stream = StreamConfig(requests=128, qps=500.0, candidates=CANDIDATES,
+                          zipf_a=ZIPF_A, deadline_s=None)
+    best = 0.0
+    for policy in ("rrpv", "lru"):
+        cc = CacheConfig(budget_bytes=budget, hot_fraction=0.0,
+                         policy=policy, tile_e=128)
+        best = max(best, run_recsys_stream(cfg, cc, sched, stream,
+                                           service_time_s=1e-3)["hit_rate"])
+    return best
+
+
+# ---------------------------------------------------------------------------
+# phase 1: closed-loop hit rate over sockets
+# ---------------------------------------------------------------------------
+def closed_loop(requests: int, workers: int = 4):
+    sched = SchedulerConfig(max_batch=8, max_queue=256)
+    eng = _make_engine(pace_s=2e-3, sched=sched)
+    payloads = _payloads(eng.cfg, requests)
+    server = GatewayServer({"score": EnginePump(eng, "score")}).start()
+    client = GatewayClient(server.url, timeout_s=30.0)
+    it = iter(range(requests))
+    it_lock = threading.Lock()
+    done, errors = [], []
+
+    def worker():
+        while True:
+            with it_lock:
+                i = next(it, None)
+            if i is None:
+                return
+            try:
+                s = client.score(payloads[i]["hist"],
+                                 payloads[i]["candidates"], timeout_s=30.0)
+                assert s.shape == (CANDIDATES,) and np.isfinite(s).all()
+                done.append(i)
+            except Exception as e:  # noqa: BLE001 — tallied + asserted below
+                errors.append((i, repr(e)))
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(workers)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_TIMEOUT_S)
+    hung = [t for t in threads if t.is_alive()]
+    wall = time.monotonic() - t0
+    snap = eng.metrics.snapshot()
+    server.stop()
+    assert not hung, f"closed loop: {len(hung)} worker(s) still alive"
+    assert not errors, f"closed loop: {len(errors)} failed, first {errors[:3]}"
+    assert len(done) == requests
+    assert snap["counters"]["completed"] == requests
+    return {"snapshot": snap, "wall_s": wall, "requests": requests,
+            "workers": workers, "hit_rate": snap["hit_rate"]}
+
+
+# ---------------------------------------------------------------------------
+# phase 2: open-loop 2x overload with deadlines
+# ---------------------------------------------------------------------------
+def overload(requests: int = 512, pace_s: float = 0.01,
+             deadline_ms: float = 40.0, max_queue: int = 64):
+    sched = SchedulerConfig(max_batch=8, max_queue=max_queue,
+                            default_deadline_s=deadline_ms / 1e3)
+    eng = _make_engine(pace_s=pace_s, sched=sched)
+    payloads = _payloads(eng.cfg, requests, seed=1)
+    server = GatewayServer({"score": EnginePump(eng, "score")}).start()
+    client = GatewayClient(server.url, timeout_s=20.0, retries=8,
+                           backoff_s=0.02, backoff_cap_s=0.3)
+
+    capacity_rps = sched.max_batch / pace_s
+    offered_rps = 2.0 * capacity_rps            # the 2x-overload point
+    start = time.monotonic() + 0.25
+    outcomes = {"done": 0, "rejected": 0, "shed": 0, "timeout": 0, "error": 0}
+    out_lock = threading.Lock()
+
+    def fire(i: int):
+        time.sleep(max(0.0, start + i / offered_rps - time.monotonic()))
+        try:
+            client.score(payloads[i]["hist"], payloads[i]["candidates"],
+                         deadline_ms=deadline_ms, timeout_s=20.0)
+            kind = "done"
+        except GatewayError as e:
+            kind = e.kind if e.kind in outcomes else "error"
+        except Exception:  # noqa: BLE001 — tally, never die silently
+            kind = "error"
+        with out_lock:
+            outcomes[kind] += 1
+
+    threads = [threading.Thread(target=fire, args=(i,), daemon=True)
+               for i in range(requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_TIMEOUT_S)
+    hung = sum(t.is_alive() for t in threads)
+    server.stop()                               # graceful drain
+    snap = eng.metrics.snapshot()
+    c = snap["counters"]
+
+    # -- liveness: every submitted request resolved ---------------------
+    assert hung == 0, f"overload: {hung} request thread(s) hung"
+    assert sum(outcomes.values()) == requests
+    assert outcomes["timeout"] == 0 and outcomes["error"] == 0, outcomes
+    assert c.get("failed", 0) == 0
+    # server-side conservation: everything admitted was completed or shed
+    assert c["admitted"] == c.get("completed", 0) + c.get("shed", 0), c
+
+    # -- the tail bound survives real sockets/threads -------------------
+    service_max = snap["latency"]["service"]["max_s"]
+    e2e_max = snap["latency"]["e2e"]["max_s"]
+    bound = deadline_ms / 1e3 + service_max + 1e-6
+    assert e2e_max <= bound, (
+        f"served worst-case e2e {e2e_max*1e3:.1f}ms exceeds deadline+batch "
+        f"bound {bound*1e3:.1f}ms")
+
+    # -- overload actually overloads, and the system still serves -------
+    dropped = c.get("shed", 0) + c.get("rejected", 0)
+    assert dropped > 0, "2x overload must shed/reject some load"
+    assert c.get("completed", 0) > 0, "shed-load must not starve the engine"
+
+    # -- client retries recover through transient 503s ------------------
+    stats = dict(client.stats)
+    assert stats["retries_503"] > 0, "overload produced no 503 retries"
+    assert stats["recovered"] > 0, (
+        "no request recovered via retry-after-503")
+
+    return {
+        "snapshot": snap, "outcomes": outcomes, "client": stats,
+        "offered_rps": offered_rps, "capacity_rps": capacity_rps,
+        "deadline_ms": deadline_ms, "pace_s": pace_s,
+        "e2e_max_s": e2e_max, "service_max_s": service_max,
+        "bound_s": bound, "p99_s": snap["latency"]["e2e"]["p99_s"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_gateway.json")
+    ap.add_argument("--requests", type=int, default=128,
+                    help="closed-loop request count (matches serve_smoke)")
+    ap.add_argument("--overload-requests", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    base = _unpinned_baseline(os.path.dirname(args.out) or ".")
+    closed = closed_loop(args.requests)
+    print(f"[gateway-smoke] closed loop: {closed['requests']} served over "
+          f"sockets in {closed['wall_s']:.2f}s; GRASP hit="
+          f"{closed['hit_rate']:.2%} vs unpinned baseline {base:.2%}")
+    assert closed["hit_rate"] >= base, (
+        f"GRASP hit rate {closed['hit_rate']:.2%} under concurrency fell "
+        f"below the unpinned baseline {base:.2%}")
+    assert closed["hit_rate"] > 0.5          # a real cache, not pass-through
+
+    over = overload(args.overload_requests)
+    o, cs = over["outcomes"], over["client"]
+    print(f"[gateway-smoke] overload 2x: done={o['done']} shed={o['shed']} "
+          f"rejected={o['rejected']} | retries={cs['retries_503']} "
+          f"recovered={cs['recovered']} | e2e max="
+          f"{over['e2e_max_s']*1e3:.1f}ms bound={over['bound_s']*1e3:.1f}ms")
+
+    out = {
+        "closed_loop": closed,
+        "overload": over,
+        "verdict": {
+            "gateway_hit_rate": closed["hit_rate"],
+            "unpinned_baseline_hit_rate": base,
+            "margin": closed["hit_rate"] - base,
+            "overload_e2e_max_s": over["e2e_max_s"],
+            "overload_bound_s": over["bound_s"],
+            "retries_recovered": cs["recovered"],
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"[gateway-smoke] OK — GRASP beats unpinned by "
+          f"{(closed['hit_rate'] - base) * 1e2:.1f}pt over real sockets; "
+          f"wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()  # assertion failure -> traceback + non-zero exit

@@ -1,13 +1,44 @@
 """Batched LM serving example: prefill + decode with a KV cache.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py              # local loop
+    PYTHONPATH=src python examples/serve_lm.py --gateway    # over sockets
+
+``--gateway`` runs the same engine behind the repro.gateway front-end on
+an ephemeral loopback port, sends a few generate requests through the
+retrying client, prints the served continuations, and drains gracefully.
 """
-import sys, os
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch import serve
 
 
+def gateway_demo():
+    from repro.gateway import EnginePump, GatewayClient, GatewayServer
+    from repro.serve.engine import LMServeEngine
+    from repro.serve.scheduler import SchedulerConfig
+
+    engine = LMServeEngine(
+        arch="starcoder2-7b", smoke=True,
+        sched_config=SchedulerConfig(max_batch=4, max_queue=32),
+        prefill=16, decode=8)
+    engine.warmup()
+    with GatewayServer({"generate": EnginePump(engine, "generate")}) as srv:
+        client = GatewayClient(srv.url, timeout_s=120.0)
+        print(f"[example] gateway up at {srv.url}; "
+              f"health={client.health()['status']}")
+        for prompt in ([1, 2, 3], [7, 8, 9, 10], [42]):
+            out = client.generate(prompt, timeout_s=120.0)
+            print(f"[example] prompt={prompt} -> continuation={out}")
+        tokens = client.metrics()["generate"]["counters"]["tokens_generated"]
+        print(f"[example] served {tokens} tokens over HTTP; draining")
+
+
 if __name__ == "__main__":
-    serve.main(["--arch", "starcoder2-7b", "--requests", "16",
-                "--batch", "8", "--prefill", "64", "--decode", "32"])
+    if "--gateway" in sys.argv:
+        gateway_demo()
+    else:
+        serve.main(["--arch", "starcoder2-7b", "--requests", "16",
+                    "--batch", "8", "--prefill", "64", "--decode", "32"])

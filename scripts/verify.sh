@@ -14,4 +14,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # baselines + shed-load p99 bound); emits BENCH_serve.json
 PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
 
+# non-tier-1: gateway RPC front-end over loopback sockets (closed-loop hit
+# rate vs the baseline BENCH_serve.json just wrote + 2x-overload tail
+# bound + 503-retry recovery); bounded wall-clock, emits BENCH_gateway.json
+PYTHONPATH=src timeout 600 python -m benchmarks.gateway_smoke --out BENCH_gateway.json
+
 echo "verify: OK"

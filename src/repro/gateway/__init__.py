@@ -1,0 +1,32 @@
+"""repro.gateway — async RPC serving front-end for the repro.serve tier.
+
+``pump`` runs one background thread per engine that continuously drains
+the continuous batcher; ``server`` is the stdlib ThreadingHTTPServer
+JSON-RPC front-end (``/v1/generate``, ``/v1/score``, ``/healthz``,
+``/metrics``); ``client`` is the urllib client with typed errors and
+bounded-backoff retries on 503; ``errors`` is the shared taxonomy. See
+README.md in this directory for the architecture and drain protocol.
+"""
+from repro.gateway.client import GatewayClient
+from repro.gateway.errors import (
+    Failed,
+    GatewayError,
+    Rejected,
+    Shed,
+    Timeout,
+    error_for_status,
+)
+from repro.gateway.pump import EnginePump
+from repro.gateway.server import GatewayServer
+
+__all__ = [
+    "EnginePump",
+    "GatewayServer",
+    "GatewayClient",
+    "GatewayError",
+    "Rejected",
+    "Shed",
+    "Timeout",
+    "Failed",
+    "error_for_status",
+]

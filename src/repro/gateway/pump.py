@@ -1,0 +1,159 @@
+"""Engine pump: the background thread that turns a serve engine into an
+async component.
+
+``repro.serve`` engines are passive — someone must call ``step()`` to
+drain the batcher. In the simulated drivers that someone is the benchmark
+loop on a virtual clock; behind a real RPC front-end it is this pump: one
+daemon thread per engine that continuously claims the next batch, runs
+the forward, and completes it, while HTTP handler threads block only on
+their *own* request's completion event (``Request.done`` — no polling, no
+global barrier).
+
+Liveness invariants (what makes the gateway hang-free):
+
+- every submitted request reaches a terminal status: rejects resolve
+  synchronously in ``submit``, sheds resolve inside ``next_batch``, served
+  requests resolve in ``complete``, and a forward that *raises* resolves
+  its whole batch via ``ContinuousBatcher.fail`` — the exception is
+  attached to the requests instead of killing the pump;
+- ``result()`` converts terminal statuses to the typed taxonomy in
+  ``gateway.errors`` and enforces the caller's wait budget (``Timeout``);
+- graceful drain: ``drain()`` closes admissions (new submits raise
+  ``Rejected``), lets queued work finish (expired entries shed as usual),
+  and ``close()`` then stops and joins the thread. Shutdown can strand
+  nothing: whatever is still queued when the drain budget runs out is
+  failed out explicitly.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Optional
+
+from repro.gateway.errors import GatewayError, Rejected, Timeout, error_for_status
+from repro.serve.scheduler import Request
+
+# idle pumps park on this wait; submits wake them immediately via the event
+_IDLE_WAIT_S = 0.005
+
+
+class EnginePump:
+    """Background continuous-batching loop around one serve engine.
+
+    ``engine`` needs the ``_EngineBase`` surface: ``.batcher`` and
+    ``.forward(payloads)``. The pump is started explicitly (``start()`` or
+    context manager) and runs until ``close()``.
+    """
+
+    def __init__(self, engine, name: str = "engine") -> None:
+        self.engine = engine
+        self.name = name
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._closed = False          # admissions closed (draining/stopped)
+        self._busy = False            # a claimed batch is in flight
+        self._thread = threading.Thread(
+            target=self._run, name=f"pump-{name}", daemon=True)
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "EnginePump":
+        if self._thread.ident is None:   # idempotent: threads start once
+            self._thread.start()
+        return self
+
+    def __enter__(self) -> "EnginePump":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    @property
+    def draining(self) -> bool:
+        return self._closed
+
+    def _run(self) -> None:
+        batcher = self.engine.batcher
+        while not self._stop.is_set():
+            # busy is raised BEFORE the claim so drain() can never observe
+            # "queue empty + not busy" between next_batch and complete
+            self._busy = True
+            batch = batcher.next_batch()
+            if not batch:
+                self._busy = False
+                self._wake.wait(_IDLE_WAIT_S)
+                self._wake.clear()
+                continue
+            try:
+                results = self.engine.forward([r.payload for r in batch])
+                batcher.complete(batch, list(results))
+            except Exception as exc:   # noqa: BLE001 — resolve, don't die
+                batcher.fail(batch, exc)
+            finally:
+                self._busy = False
+
+    # -- request path ----------------------------------------------------
+    def submit(self, payload: Any,
+               deadline_s: Optional[float] = None) -> Request:
+        """Enqueue one request; raises ``Rejected`` when admissions are
+        closed (draining) or the queue is full."""
+        if self._closed:
+            raise Rejected(f"{self.name}: draining, admissions closed")
+        req = self.engine.batcher.submit(payload, deadline_s)
+        if req.status == "rejected":
+            raise Rejected(f"{self.name}: queue full "
+                           f"({self.engine.batcher.config.max_queue})")
+        self._wake.set()
+        return req
+
+    def result(self, req: Request, timeout: Optional[float] = None) -> Any:
+        """Block on ``req``'s completion event; return its result or raise
+        the typed error for its terminal status."""
+        if not req.wait(timeout):
+            raise Timeout(f"{self.name}: request {req.rid} unresolved "
+                          f"after {timeout}s")
+        if req.status == "done":
+            return req.result
+        raise error_for_status(req.status, f"{self.name}: request {req.rid} "
+                                           f"{req.status} ({req.error})")
+
+    def call(self, payload: Any, deadline_s: Optional[float] = None,
+             timeout: Optional[float] = None) -> Any:
+        """submit + result — the synchronous convenience used by handlers."""
+        return self.result(self.submit(payload, deadline_s), timeout)
+
+    # -- drain / shutdown ------------------------------------------------
+    def drain(self, timeout: Optional[float] = 30.0) -> bool:
+        """Stop admissions and wait for in-flight work to finish.
+
+        Returns True when the queue emptied and the last batch completed
+        within ``timeout``; on False the caller may still ``close()`` —
+        leftovers are failed out rather than stranded.
+        """
+        self._closed = True
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while self.engine.batcher.depth > 0 or self._busy:
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            self._wake.set()
+            time.sleep(_IDLE_WAIT_S / 5)
+        return True
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Graceful shutdown: drain, stop the loop, join the thread, and
+        fail out anything the drain budget left behind."""
+        self.drain(timeout)
+        self._stop.set()
+        self._wake.set()
+        if self._thread.ident is not None:   # never-started pumps have no thread
+            self._thread.join(timeout)
+        # a drain timeout (or a never-started pump) can leave queued
+        # requests behind — resolve them so no caller hangs
+        leftovers = self.engine.batcher.next_batch()
+        while leftovers:
+            self.engine.batcher.fail(
+                leftovers, GatewayError("pump closed before serving"))
+            leftovers = self.engine.batcher.next_batch()

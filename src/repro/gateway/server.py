@@ -1,0 +1,224 @@
+"""JSON-RPC serving front-end over ``http.server.ThreadingHTTPServer``.
+
+Stdlib-only by design (the container has no web framework): one daemon
+thread per connection, each handler thread submits into the shared
+``EnginePump`` and blocks on its own request's completion event. The
+pump's scheduler is the single point of truth for admission control —
+the server merely translates its outcomes onto the wire:
+
+  ``POST /v1/generate``  LM prefill+decode   {"tokens": [...]} -> {"tokens": [[...], ...]}
+  ``POST /v1/score``     recsys scoring      {"hist": [...], "candidates": [...]} -> {"scores": [...]}
+  ``GET  /healthz``      liveness + drain state
+  ``GET  /metrics``      per-engine ``ServeMetrics.snapshot()``
+
+Error mapping (see ``gateway.errors``): admission-control rejects and
+deadline sheds answer **503** with a ``Retry-After`` hint — the
+backpressure signal the client's bounded exponential backoff keys on;
+caller-budget expiry answers 504; an engine fault answers 500. Request
+bodies may carry ``deadline_ms`` (queue deadline, defaults to the
+scheduler's) and ``timeout_s`` (caller wait budget).
+
+``stop()`` is the graceful-drain protocol: mark draining (new requests are
+rejected with 503), ``close()`` every pump (stop admissions, finish
+in-flight batches, join the pump thread), then shut the listener down.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.gateway.errors import GatewayError, Rejected
+from repro.gateway.pump import EnginePump
+
+
+class _BadRequest(Exception):
+    """Malformed request body — answered with 400, never enters the pump."""
+
+
+class _HTTPServer(ThreadingHTTPServer):
+    daemon_threads = True
+    # socketserver's default listen backlog is 5 — an open-loop arrival
+    # burst would see connection resets before admission control ever runs
+    request_queue_size = 1024
+    gateway: "GatewayServer"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server: _HTTPServer
+
+    def log_message(self, fmt, *args):  # quiet: metrics cover observability
+        pass
+
+    def _send_json(self, code: int, obj: Dict,
+                   headers: Optional[Dict[str, str]] = None) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self) -> None:
+        gw = self.server.gateway
+        if self.path == "/healthz":
+            self._send_json(200, gw.health())
+        elif self.path == "/metrics":
+            self._send_json(200, gw.metrics())
+        else:
+            self._send_json(404, {"error": "not_found", "detail": self.path})
+
+    def do_POST(self) -> None:
+        gw = self.server.gateway
+        route = gw.routes.get(self.path)
+        if route is None:
+            self._send_json(404, {"error": "not_found", "detail": self.path})
+            return
+        try:
+            length = int(self.headers.get("Content-Length") or 0)
+            obj = json.loads(self.rfile.read(length) or b"{}")
+            if not isinstance(obj, dict):
+                raise _BadRequest("body must be a JSON object")
+            self._send_json(200, route(obj))
+        except _BadRequest as e:
+            self._send_json(400, {"error": "bad_request", "detail": str(e)})
+        except (json.JSONDecodeError, ValueError, TypeError) as e:
+            self._send_json(400, {"error": "bad_request", "detail": str(e)})
+        except GatewayError as e:
+            headers = ({"Retry-After": f"{gw.retry_after_s:.3f}"}
+                       if e.http_status == 503 else {})
+            self._send_json(e.http_status,
+                            {"error": e.kind, "detail": str(e)}, headers)
+        except Exception as e:  # noqa: BLE001 — surface bugs as 500s
+            self._send_json(500, {"error": "error", "detail": repr(e)})
+
+
+class GatewayServer:
+    """HTTP front-end over named engine pumps.
+
+    ``pumps`` maps route names to pumps: ``"generate"`` mounts
+    ``/v1/generate`` (an ``LMServeEngine``), ``"score"`` mounts
+    ``/v1/score`` (a ``RecsysServeEngine``). ``port=0`` binds an ephemeral
+    port — read it back from ``.address``/``.url`` (loopback tests).
+    """
+
+    def __init__(
+        self,
+        pumps: Dict[str, EnginePump],
+        host: str = "127.0.0.1",
+        port: int = 0,
+        request_timeout_s: float = 30.0,
+        retry_after_s: float = 0.05,
+    ) -> None:
+        self.pumps = dict(pumps)
+        self.request_timeout_s = float(request_timeout_s)
+        self.retry_after_s = float(retry_after_s)
+        self.routes = {}
+        if "generate" in self.pumps:
+            self.routes["/v1/generate"] = self._generate
+        if "score" in self.pumps:
+            self.routes["/v1/score"] = self._score
+        self._draining = False
+        self._httpd = _HTTPServer((host, port), _Handler)
+        self._httpd.gateway = self
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="gateway-http", daemon=True)
+
+    # -- lifecycle -------------------------------------------------------
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def start(self) -> "GatewayServer":
+        for pump in self.pumps.values():
+            pump.start()
+        self._thread.start()
+        return self
+
+    def stop(self, drain_timeout_s: float = 30.0) -> None:
+        """Graceful drain: reject new work, finish in-flight, shut down."""
+        self._draining = True
+        for pump in self.pumps.values():
+            pump.close(drain_timeout_s)
+        if self._thread.ident is not None:   # shutdown() blocks forever if
+            self._httpd.shutdown()           # serve_forever never started
+            self._thread.join(5.0)
+        self._httpd.server_close()
+
+    def __enter__(self) -> "GatewayServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- introspection ---------------------------------------------------
+    def health(self) -> Dict:
+        return {
+            "status": "draining" if self._draining else "ok",
+            "engines": {
+                name: {"depth": pump.engine.batcher.depth,
+                       "draining": pump.draining,
+                       "running": pump.running}
+                for name, pump in self.pumps.items()
+            },
+        }
+
+    def metrics(self) -> Dict:
+        return {name: pump.engine.metrics.snapshot()
+                for name, pump in self.pumps.items()}
+
+    # -- routes ----------------------------------------------------------
+    def _budgets(self, obj: Dict) -> Tuple[Optional[float], float]:
+        deadline_ms = obj.get("deadline_ms")
+        deadline_s = None if deadline_ms is None else float(deadline_ms) / 1e3
+        return deadline_s, float(obj.get("timeout_s", self.request_timeout_s))
+
+    def _call(self, pump: EnginePump, payload: Dict, obj: Dict):
+        if self._draining:
+            raise Rejected("gateway draining")
+        deadline_s, timeout_s = self._budgets(obj)
+        return pump.call(payload, deadline_s=deadline_s, timeout=timeout_s)
+
+    def _score(self, obj: Dict) -> Dict:
+        pump = self.pumps["score"]
+        cfg = pump.engine.cfg
+        hist = np.asarray(obj.get("hist", []), dtype=np.int64).ravel()
+        cand = np.asarray(obj.get("candidates", []), dtype=np.int64).ravel()
+        if hist.size == 0 or cand.size == 0:
+            raise _BadRequest("'hist' and 'candidates' are required")
+        for name, ids in (("hist", hist), ("candidates", cand)):
+            if ids.min() < 0 or ids.max() >= cfg.n_items:
+                raise _BadRequest(
+                    f"'{name}' ids must be in [0, {cfg.n_items})")
+        h = hist[-cfg.hist_len:]
+        full = np.zeros(cfg.hist_len, np.int32)
+        mask = np.zeros(cfg.hist_len, bool)
+        full[: h.size] = h
+        mask[: h.size] = True
+        if "hist_mask" in obj:
+            m = np.asarray(obj["hist_mask"], dtype=bool).ravel()[-cfg.hist_len:]
+            mask[: m.size] &= m[: m.size]
+        payload = {"hist": full, "hist_mask": mask,
+                   "candidates": cand.astype(np.int32)}
+        scores = self._call(pump, payload, obj)
+        return {"scores": np.asarray(scores, np.float64).tolist()}
+
+    def _generate(self, obj: Dict) -> Dict:
+        pump = self.pumps["generate"]
+        toks = obj.get("tokens")
+        if not toks or not isinstance(toks, list):
+            raise _BadRequest("'tokens' must be a non-empty list of ids")
+        payload = {"tokens": np.asarray(toks, np.int32)}
+        out = self._call(pump, payload, obj)
+        return {"tokens": np.asarray(out, np.int64).tolist()}

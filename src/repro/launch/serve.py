@@ -10,8 +10,15 @@
     PYTHONPATH=src python -m repro.launch.serve --engine recsys \
         --requests 256 --qps 2000 --budget-kb 256 --json /tmp/serve.json
 
-All real logic lives in ``repro.serve``; this module only parses flags and
-prints/emits the metrics snapshot.
+    # put either engine behind the repro.gateway RPC front-end (serves
+    # until Ctrl-C, then drains gracefully):
+    PYTHONPATH=src python -m repro.launch.serve --engine recsys \
+        --gateway 127.0.0.1:8077
+    curl -s -XPOST localhost:8077/v1/score \
+        -d '{"hist": [1,2,3], "candidates": [4,5]}'
+
+All real logic lives in ``repro.serve``/``repro.gateway``; this module
+only parses flags and prints/emits the metrics snapshot.
 """
 from __future__ import annotations
 
@@ -19,9 +26,68 @@ import argparse
 import json
 
 
+def _run_gateway(args):
+    """Build the requested engine, wrap it in a pump, and serve until
+    interrupted; Ctrl-C triggers the graceful drain protocol."""
+    from repro.gateway import EnginePump, GatewayServer
+    from repro.serve.scheduler import SchedulerConfig
+
+    host, _, port = args.gateway.rpartition(":")
+    # best-effort unless a deadline was asked for explicitly — a blanket
+    # 50ms default would shed every LM batch before it finished decoding
+    deadline_s = None if args.deadline_ms is None else args.deadline_ms / 1e3
+    sched = SchedulerConfig(max_batch=args.batch, max_queue=args.max_queue,
+                            default_deadline_s=deadline_s)
+    if args.engine == "lm":
+        from repro.serve.engine import LMServeEngine
+
+        engine = LMServeEngine(arch=args.arch, smoke=args.smoke,
+                               sched_config=sched, prefill=args.prefill,
+                               decode=args.decode)
+        engine.warmup()
+        name = "generate"
+    else:
+        import jax
+
+        from repro.configs import base as cfgs
+        from repro.nn import recsys as recsys_mod
+        from repro.serve.cache import CacheConfig
+        from repro.serve.engine import RecsysServeEngine
+
+        cfg = cfgs.get_arch("mind")
+        if args.smoke:
+            cfg = cfgs.reduced(cfg)
+        engine = RecsysServeEngine(
+            recsys_mod.init(jax.random.PRNGKey(0), cfg), cfg,
+            CacheConfig(budget_bytes=args.budget_kb << 10,
+                        hot_fraction=args.hot_frac, policy=args.policy),
+            sched)
+        engine.warmup(candidates=args.candidates)
+        name = "score"
+
+    server = GatewayServer({name: EnginePump(engine, name)},
+                           host=host or "127.0.0.1", port=int(port)).start()
+    print(f"[gateway] {args.engine} engine on {server.url} "
+          f"(/v1/{name}, /healthz, /metrics) — Ctrl-C to drain and stop")
+    try:
+        while True:
+            server._thread.join(3600.0)
+    except KeyboardInterrupt:
+        print("[gateway] draining...")
+        server.stop()
+        snap = engine.metrics.snapshot()
+        c = snap["counters"]
+        print(f"[gateway] stopped: completed={c.get('completed', 0)} "
+              f"shed={c.get('shed', 0)} rejected={c.get('rejected', 0)}")
+        return snap
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", choices=("lm", "recsys"), default="lm")
+    ap.add_argument("--gateway", default=None, metavar="HOST:PORT",
+                    help="serve over the repro.gateway RPC front-end "
+                         "instead of running a local loop")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
@@ -36,12 +102,17 @@ def main(argv=None):
     ap.add_argument("--hot-frac", type=float, default=0.5,
                     help="share of the budget pinned (0 = unpinned baseline)")
     ap.add_argument("--policy", choices=("rrpv", "lru"), default="rrpv")
-    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="queue deadline; local recsys loop defaults to "
+                         "50ms, gateway mode to best-effort")
     ap.add_argument("--max-queue", type=int, default=256)
     ap.add_argument("--candidates", type=int, default=32)
     ap.add_argument("--zipf-a", type=float, default=1.1)
     ap.add_argument("--json", default=None, help="write metrics snapshot here")
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        return _run_gateway(args)
 
     if args.engine == "lm":
         from repro.serve.engine import lm_loop
@@ -58,15 +129,16 @@ def main(argv=None):
     cfg = cfgs.get_arch("mind")
     if args.smoke:
         cfg = cfgs.reduced(cfg)
+    deadline_ms = 50.0 if args.deadline_ms is None else args.deadline_ms
     snap = run_recsys_stream(
         cfg,
         CacheConfig(budget_bytes=args.budget_kb << 10,
                     hot_fraction=args.hot_frac, policy=args.policy),
         SchedulerConfig(max_batch=args.batch, max_queue=args.max_queue,
-                        default_deadline_s=args.deadline_ms / 1e3),
+                        default_deadline_s=deadline_ms / 1e3),
         StreamConfig(requests=args.requests, qps=args.qps,
                      candidates=args.candidates, zipf_a=args.zipf_a,
-                     deadline_s=args.deadline_ms / 1e3),
+                     deadline_s=deadline_ms / 1e3),
     )
     c, lat = snap["counters"], snap["latency"]
     e2e = lat.get("e2e", {})

@@ -5,7 +5,8 @@ The online tier of the reproduction: ``cache`` (two-region GRASP embedding
 cache), ``scheduler`` (continuous batching, admission control, deadlines,
 shed load), ``metrics`` (hit/latency accounting + JSON snapshots) and
 ``engine`` (recsys/GNN/LM serving drivers). See README.md in this
-directory for the architecture.
+directory for the architecture; ``repro.gateway`` puts these engines
+behind a thread-pumped RPC front-end.
 """
 from repro.serve.cache import CacheConfig, EmbeddingCache, LookupStats
 from repro.serve.metrics import LatencyHistogram, ServeMetrics

@@ -14,6 +14,11 @@ Both engines pad partial batches up to ``max_batch`` *after* the cache
 lookup, so jit sees one static shape (no per-batch-size recompiles) while
 the cache only ever sees real references.
 
+``LMServeEngine`` serves transformer generate requests (prefill + greedy
+decode against a KV cache) behind the same continuous batcher, so the
+gateway can put `/v1/generate` on the identical pump/scheduler path as
+`/v1/score`.
+
 ``lm_loop`` is the transformer prefill+decode driver that used to live in
 ``launch/serve.py``, kept as the third engine behind the same CLI. Its
 final partial batch now computes exactly the remaining ``n`` sequences
@@ -134,8 +139,11 @@ class RecsysServeEngine(_EngineBase):
     def forward(self, payloads: List[Dict]) -> np.ndarray:
         """Score a list of request payloads; returns (n, C)."""
         n = len(payloads)
-        hist = np.stack([p["hist"] for p in payloads])
-        cand = np.stack([p["candidates"] for p in payloads])
+        # normalize dtypes so JSON-decoded gateway payloads (int64 lists)
+        # hit the same jit specialization as native int32 arrays
+        hist = np.stack([p["hist"] for p in payloads]).astype(np.int32)
+        cand = np.stack([p["candidates"] for p in payloads]).astype(np.int32)
+        mask = np.stack([p["hist_mask"] for p in payloads]).astype(bool)
         e, _ = self.cache.lookup(hist.reshape(-1))
         ce, _ = self.cache.lookup(cand.reshape(-1))
         e = np.asarray(e).reshape(hist.shape + (self.cache.dim,))
@@ -144,11 +152,23 @@ class RecsysServeEngine(_EngineBase):
         scores = self._routed(
             self.params,
             jnp.asarray(_pad_batch(list(e), w)),
-            jnp.asarray(_pad_batch([p["hist"] for p in payloads], w)),
-            jnp.asarray(_pad_batch([p["hist_mask"] for p in payloads], w)),
+            jnp.asarray(_pad_batch(list(hist), w)),
+            jnp.asarray(_pad_batch(list(mask), w)),
             jnp.asarray(_pad_batch(list(ce), w)),
         )
         return np.asarray(jax.block_until_ready(scores))[:n]
+
+    def warmup(self, candidates: int) -> None:
+        """Trigger the jit compile for the canonical batch shape without
+        touching the cache or metrics (gateway startup / benchmarks)."""
+        w, h, d = self._width, self.cfg.hist_len, self.cache.dim
+        jax.block_until_ready(self._routed(
+            self.params,
+            jnp.zeros((w, h, d), jnp.float32),
+            jnp.zeros((w, h), jnp.int32),
+            jnp.zeros((w, h), bool),
+            jnp.zeros((w, candidates, d), jnp.float32),
+        ))
 
 
 class GNNServeEngine(_EngineBase):
@@ -219,6 +239,78 @@ class GNNServeEngine(_EngineBase):
         }
         out = jax.block_until_ready(self._apply(self.params, batch))
         return np.asarray(out)[blocks.seeds_local]
+
+
+class LMServeEngine(_EngineBase):
+    """Transformer prefill+decode serving behind the continuous batcher.
+
+    Request payload: ``{"tokens": (<=prefill,) int prompt ids}``; result:
+    ``(decode,)`` int32 greedily-decoded ids. Prompts are clipped to the
+    last ``prefill`` tokens and left-padded with token 0, so every batch
+    hits one static ``(max_batch, prefill)`` jit specialization — the shape
+    the gateway pump keeps hot.
+    """
+
+    def __init__(
+        self,
+        arch: str = "minitron-8b",
+        smoke: bool = True,
+        sched_config: Optional[SchedulerConfig] = None,
+        prefill: int = 64,
+        decode: int = 32,
+        params: Optional[Dict] = None,
+        metrics: Optional[ServeMetrics] = None,
+        clock=time.monotonic,
+        service_model=None,
+    ) -> None:
+        from repro.configs import base as cfgs
+        from repro.nn import transformer as tfm
+
+        cfg = cfgs.get_arch(arch)
+        if smoke:
+            cfg = cfgs.reduced(cfg)
+        self.cfg = cfg
+        self.prefill_len = int(prefill)
+        self.decode_len = int(decode)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        sched_config = sched_config if sched_config is not None else SchedulerConfig()
+        self.batcher = ContinuousBatcher(sched_config, clock=clock,
+                                         metrics=self.metrics)
+        self._width = sched_config.max_batch
+        self.service_model = service_model
+        self.params = (params if params is not None
+                       else tfm.init(jax.random.PRNGKey(0), cfg))
+        max_len = self.prefill_len + self.decode_len
+        self._prefill = jax.jit(
+            lambda p, t: tfm.prefill(p, cfg, t, max_len=max_len))
+        self._decode = jax.jit(lambda p, c, t: tfm.decode_step(p, cfg, c, t))
+
+    def _generate(self, tokens: np.ndarray) -> np.ndarray:
+        """(w, prefill) int32 -> (w, decode) int32 greedy continuation."""
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(self.decode_len - 1):
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def forward(self, payloads: List[Dict]) -> np.ndarray:
+        n = len(payloads)
+        toks = np.zeros((self._width, self.prefill_len), np.int32)
+        for i, p in enumerate(payloads):
+            t = np.asarray(p["tokens"], np.int32).ravel()[-self.prefill_len:]
+            t = np.clip(t, 0, self.cfg.vocab - 1)
+            toks[i, self.prefill_len - t.size:] = t
+        out = self._generate(toks)
+        self.metrics.count("tokens_generated", n * self.decode_len)
+        return out[:n]
+
+    def warmup(self) -> None:
+        """Compile prefill+decode for the canonical batch shape up front."""
+        self._generate(np.zeros((self._width, self.prefill_len), np.int32))
 
 
 # ---------------------------------------------------------------------------

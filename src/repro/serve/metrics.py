@@ -3,14 +3,24 @@
 Everything here is host-side and allocation-free on the hot path: latencies
 land in fixed log-spaced buckets (no per-sample storage), counters are a
 plain dict. ``snapshot()`` returns the JSON-ready view the benchmarks
-consume (``BENCH_serve.json``); percentile estimates are read back from the
-bucket *upper* edges (conservative; worst-case relative error = the sqrt(2)
-bucket ratio, ~41%). ``max_s``/``mean_s`` are tracked exactly — bound
-checks should use those, percentiles are for reporting shape.
+consume (``BENCH_serve.json``/``BENCH_gateway.json``); percentile estimates
+are read back from the bucket *upper* edges, capped at the exact tracked
+``max`` (conservative; worst-case relative error = the sqrt(2) bucket
+ratio, ~41%). A percentile that falls in the open-ended overflow bucket
+reports the exact ``max`` — there is no finite upper edge to read back.
+``max_s``/``mean_s`` are tracked exactly — bound checks should use those,
+percentiles are for reporting shape.
+
+``ServeMetrics`` is thread-safe: one instance is shared between the
+gateway pump thread, the HTTP handler threads serving ``/metrics``, and
+whatever thread drives the cache. A single lock guards the dict/ndarray
+mutations; ``LatencyHistogram`` itself stays lock-free (always mutate it
+through a ``ServeMetrics``, or from a single thread).
 """
 from __future__ import annotations
 
 import json
+import threading
 from typing import Dict, Optional
 
 import numpy as np
@@ -44,7 +54,11 @@ class LatencyHistogram:
         rank = np.ceil(self.total * p / 100.0)
         cum = np.cumsum(self.counts)
         i = int(np.searchsorted(cum, max(rank, 1)))
-        return float(_EDGES[min(i, _N_BUCKETS - 1)])
+        if i >= _N_BUCKETS:
+            # open-ended overflow bucket: no finite upper edge to report —
+            # fall back to the exact tracked max
+            return float(self.max)
+        return float(min(_EDGES[i], self.max))
 
     @property
     def mean(self) -> float:
@@ -65,7 +79,8 @@ class ServeMetrics:
 
     Counter names used by the subsystem (all monotonically increasing):
       cache: ``hot_hits`` ``cold_hits`` ``misses`` ``bypassed``
-      scheduler: ``admitted`` ``rejected`` ``shed`` ``completed`` ``batches``
+      scheduler: ``admitted`` ``rejected`` ``shed`` ``completed``
+      ``failed`` ``batches``
     Histograms: ``queue_wait`` ``service`` ``e2e`` (seconds).
     """
 
@@ -73,33 +88,43 @@ class ServeMetrics:
         self.counters: Dict[str, int] = {}
         self.hists: Dict[str, LatencyHistogram] = {}
         self.gauges: Dict[str, float] = {}
+        self._lock = threading.Lock()
 
     def count(self, name: str, n: int = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + int(n)
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + int(n)
 
     def observe(self, name: str, seconds: float) -> None:
-        if name not in self.hists:
-            self.hists[name] = LatencyHistogram()
-        self.hists[name].observe(seconds)
+        with self._lock:
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = LatencyHistogram()
+            h.observe(seconds)
 
     def gauge(self, name: str, value: float) -> None:
-        self.gauges[name] = float(value)
+        with self._lock:
+            self.gauges[name] = float(value)
 
     # -- derived cache figures ------------------------------------------
     @property
     def hit_rate(self) -> float:
         """(hot + cold hits) / all cache references."""
+        with self._lock:
+            return self._hit_rate_locked()
+
+    def _hit_rate_locked(self) -> float:
         hits = self.counters.get("hot_hits", 0) + self.counters.get("cold_hits", 0)
         total = hits + self.counters.get("misses", 0)
         return hits / total if total else 0.0
 
     def snapshot(self) -> Dict:
-        return {
-            "counters": dict(self.counters),
-            "gauges": dict(self.gauges),
-            "hit_rate": self.hit_rate,
-            "latency": {k: h.summary() for k, h in self.hists.items()},
-        }
+        with self._lock:
+            return {
+                "counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "hit_rate": self._hit_rate_locked(),
+                "latency": {k: h.summary() for k, h in self.hists.items()},
+            }
 
     def write_json(self, path: str, extra: Optional[Dict] = None) -> Dict:
         snap = self.snapshot()

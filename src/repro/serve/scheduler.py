@@ -15,6 +15,13 @@ waited at most its deadline in queue, so e2e latency is bounded by
 ``deadline + one batch service time`` no matter how far the offered load
 exceeds the budget — overload degrades throughput (sheds), not p99.
 
+Every ``Request`` carries a completion event that is set exactly once,
+when it reaches a terminal status (done / shed / rejected / failed) — the
+gateway pump's callers block on ``Request.wait`` instead of polling, and a
+request can never hang: rejects resolve synchronously in ``submit``, sheds
+resolve in ``next_batch``, and a batch whose forward raises is resolved
+with a typed error via ``fail``.
+
 The clock is injectable so tests and the smoke benchmark can drive a
 virtual timeline deterministically (see ``VirtualClock``).
 """
@@ -42,10 +49,26 @@ class Request:
     payload: Any
     arrival: float
     deadline: Optional[float]    # absolute time; None = best-effort
-    status: str = "queued"       # queued | running | done | shed | rejected
+    status: str = "queued"       # queued | running | done | shed | rejected | failed
     started: Optional[float] = None
     finished: Optional[float] = None
     result: Any = None
+    error: Optional[BaseException] = None   # set when status == "failed"
+    # completion event: set exactly once, when the request reaches a
+    # terminal status (done/shed/rejected/failed). Gateway callers block on
+    # this instead of polling ``status``.
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    TERMINAL = frozenset({"done", "shed", "rejected", "failed"})
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the request resolves; True iff it did in time."""
+        return self.done.wait(timeout)
+
+    @property
+    def resolved(self) -> bool:
+        return self.done.is_set()
 
 
 class VirtualClock:
@@ -102,6 +125,7 @@ class ContinuousBatcher:
         with self._lock:
             if len(self._pending) >= self.config.max_queue:
                 req.status = "rejected"
+                req.done.set()
                 self.metrics.count("rejected")
                 return req
             self._pending.append(req)
@@ -121,15 +145,19 @@ class ContinuousBatcher:
                     shed.append(r)
                 else:
                     keep.append(r)
+            # EDF; ties broken by arrival, then rid (= submission order), so
+            # equal-deadline requests batch in a stable FIFO order
             keep.sort(key=lambda r: (r.deadline if r.deadline is not None
-                                     else float("inf"), r.arrival))
+                                     else float("inf"), r.arrival, r.rid))
             batch = keep[: self.config.max_batch]
             self._pending = keep[self.config.max_batch:]
+            for r in batch:
+                r.status = "running"
+                r.started = now
         for r in shed:
+            r.done.set()
             self.metrics.count("shed")
         for r in batch:
-            r.status = "running"
-            r.started = now
             self.metrics.observe("queue_wait", now - r.arrival)
         if batch:
             self.metrics.count("batches")
@@ -139,10 +167,26 @@ class ContinuousBatcher:
     def complete(self, batch: List[Request], results: List[Any]) -> None:
         """Attach results and record service/e2e latency for the batch."""
         now = self.clock()
-        for r, res in zip(batch, results):
-            r.status = "done"
-            r.finished = now
-            r.result = res
+        with self._lock:
+            for r, res in zip(batch, results):
+                r.status = "done"
+                r.finished = now
+                r.result = res
+        for r in batch:
+            r.done.set()
             self.metrics.count("completed")
             self.metrics.observe("service", now - (r.started or now))
             self.metrics.observe("e2e", now - r.arrival)
+
+    def fail(self, batch: List[Request], exc: BaseException) -> None:
+        """Resolve a claimed batch whose forward raised: callers must never
+        hang on a crashed batch, they get a typed error instead."""
+        now = self.clock()
+        with self._lock:
+            for r in batch:
+                r.status = "failed"
+                r.finished = now
+                r.error = exc
+        for r in batch:
+            r.done.set()
+            self.metrics.count("failed")

@@ -1,0 +1,271 @@
+"""repro.gateway: pump lifecycle, HTTP round-trips, client retry/backoff.
+
+The pump tests run against a jax-free echo engine so the concurrency
+machinery is exercised in isolation; the server tests then put the real
+recsys/LM engines behind loopback sockets and check the served answers
+against the dense references — the cache+pump+HTTP path must move rows,
+never values.
+"""
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+import pytest
+
+from repro.gateway import (
+    EnginePump,
+    Failed,
+    GatewayClient,
+    GatewayServer,
+    Rejected,
+    Shed,
+    Timeout,
+)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import ContinuousBatcher, SchedulerConfig
+
+
+class EchoEngine:
+    """Minimal ``_EngineBase`` surface: doubles integer payloads."""
+
+    def __init__(self, sched=None, delay_s=0.0):
+        self.metrics = ServeMetrics()
+        self.batcher = ContinuousBatcher(
+            sched or SchedulerConfig(max_batch=4, max_queue=8),
+            metrics=self.metrics)
+        self.delay_s = delay_s
+        self.boom = False
+
+    def forward(self, payloads):
+        if self.boom:
+            raise RuntimeError("boom")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        return [p * 2 for p in payloads]
+
+
+# ---------------------------------------------------------------------------
+# pump
+# ---------------------------------------------------------------------------
+def test_pump_concurrent_callers_get_own_results():
+    eng = EchoEngine()
+    with EnginePump(eng, "echo") as pump:
+        results = {}
+
+        def call(i):
+            results[i] = pump.call(i, timeout=10.0)
+
+        threads = [threading.Thread(target=call, args=(i,)) for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(10.0)
+        assert results == {i: 2 * i for i in range(16)}
+    assert not pump.running
+    assert eng.metrics.counters["completed"] == 16
+
+
+def test_pump_failed_forward_resolves_with_typed_error_and_survives():
+    eng = EchoEngine()
+    with EnginePump(eng, "echo") as pump:
+        eng.boom = True
+        with pytest.raises(Failed):
+            pump.call(1, timeout=10.0)
+        # the pump thread survived the exception and keeps serving
+        eng.boom = False
+        assert pump.call(2, timeout=10.0) == 4
+    assert eng.metrics.counters["failed"] == 1
+
+
+def test_pump_shed_request_raises_shed():
+    eng = EchoEngine()
+    pump = EnginePump(eng, "echo")
+    req = pump.submit(1, deadline_s=1e-4)   # pump not started yet
+    time.sleep(0.01)                        # deadline passes in queue
+    pump.start()
+    with pytest.raises(Shed):
+        pump.result(req, timeout=10.0)
+    assert req.done.is_set() and req.status == "shed"
+    pump.close()
+
+
+def test_pump_result_timeout():
+    eng = EchoEngine()
+    pump = EnginePump(eng, "echo")          # never started: nothing drains
+    req = pump.submit(1)
+    with pytest.raises(Timeout):
+        pump.result(req, timeout=0.05)
+    pump.close(timeout=1.0)
+    # close() failed the stranded request out instead of leaving it queued
+    assert req.status == "failed" and req.done.is_set()
+
+
+def test_pump_drain_closes_admissions_and_finishes_inflight():
+    eng = EchoEngine(delay_s=0.01)
+    pump = EnginePump(eng, "echo").start()
+    reqs = [pump.submit(i) for i in range(8)]
+    assert pump.drain(timeout=30.0)
+    assert all(r.status == "done" for r in reqs)
+    with pytest.raises(Rejected):
+        pump.submit(99)
+    pump.close()
+
+
+def test_pump_rejects_when_queue_full():
+    eng = EchoEngine(sched=SchedulerConfig(max_batch=2, max_queue=3))
+    pump = EnginePump(eng, "echo")          # not started: queue only fills
+    for i in range(3):
+        pump.submit(i)
+    with pytest.raises(Rejected):
+        pump.submit(3)
+    assert eng.metrics.counters["rejected"] == 1
+    pump.close(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# HTTP server round-trips (real engines, loopback sockets)
+# ---------------------------------------------------------------------------
+def test_server_score_roundtrip_matches_dense_reference():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base as cfgs
+    from repro.nn import recsys as recsys_mod
+    from repro.serve.cache import CacheConfig
+    from repro.serve.engine import RecsysServeEngine
+
+    cfg = cfgs.reduced(cfgs.get_arch("mind"))
+    params = recsys_mod.init(jax.random.PRNGKey(0), cfg)
+    eng = RecsysServeEngine(
+        params, cfg,
+        CacheConfig(budget_bytes=64 * cfg.embed_dim * 4, tile_e=128),
+        SchedulerConfig(max_batch=4, max_queue=16))
+    eng.warmup(candidates=8)
+    rng = np.random.default_rng(0)
+    hist = rng.integers(0, cfg.n_items, cfg.hist_len)
+    cand = rng.integers(0, cfg.n_items, 8)
+
+    with GatewayServer({"score": EnginePump(eng, "score")}) as server:
+        client = GatewayClient(server.url, timeout_s=30.0)
+        assert client.health()["status"] == "ok"
+        scores = client.score(hist.tolist(), cand.tolist(), timeout_s=30.0)
+        snap = client.metrics()["score"]
+        # malformed requests answer 400 without entering the pump
+        from repro.gateway import GatewayError
+        with pytest.raises(GatewayError, match="ids must be in"):
+            client._request("/v1/score", {"hist": [int(cfg.n_items)],
+                                          "candidates": [0]})
+        with pytest.raises(GatewayError):
+            client._request("/v1/nope", {})
+
+    ref = np.asarray(recsys_mod.serve_scores(params, cfg, {
+        "hist": jnp.asarray(hist[None]),
+        "hist_mask": jnp.ones((1, cfg.hist_len), bool),
+        "candidates": jnp.asarray(cand[None]),
+    }))[0]
+    np.testing.assert_allclose(scores, ref, rtol=1e-5, atol=1e-5)
+    assert snap["counters"]["completed"] == 1
+    assert 0.0 < snap["hit_rate"] <= 1.0
+
+
+def test_server_generate_roundtrip_deterministic():
+    from repro.serve.engine import LMServeEngine
+
+    eng = LMServeEngine(arch="minitron-8b", smoke=True,
+                        sched_config=SchedulerConfig(max_batch=2, max_queue=8),
+                        prefill=8, decode=4)
+    eng.warmup()
+    prompt = [1, 2, 3, 4, 5]
+    with GatewayServer({"generate": EnginePump(eng, "generate")}) as server:
+        client = GatewayClient(server.url, timeout_s=60.0)
+        out1 = client.generate(prompt, timeout_s=60.0)
+        out2 = client.generate(prompt, timeout_s=60.0)
+    assert len(out1) == 4 and out1 == out2          # greedy => deterministic
+    assert eng.metrics.counters["tokens_generated"] == 8
+    ref = eng.forward([{"tokens": np.asarray(prompt)}])[0]
+    assert out1 == ref.tolist()
+
+
+def test_server_drain_rejects_new_work():
+    eng = EchoEngine()
+    server = GatewayServer({"score": EnginePump(eng, "echo")}).start()
+    url = server.url
+    client = GatewayClient(url, timeout_s=5.0, retries=0)
+    server.stop()
+    # after stop the listener is gone: the client surfaces a typed/transport
+    # error instead of hanging
+    with pytest.raises(Exception):
+        client._request("/v1/score", {"hist": [0], "candidates": [0]})
+
+
+# ---------------------------------------------------------------------------
+# client retry behaviour against a scripted stub server
+# ---------------------------------------------------------------------------
+class _ScriptedHandler(BaseHTTPRequestHandler):
+    def log_message(self, *a):
+        pass
+
+    def do_POST(self):
+        self.rfile.read(int(self.headers.get("Content-Length") or 0))
+        code, body, headers = (self.server.script.pop(0) if self.server.script
+                               else (200, {"scores": [1.0]}, {}))
+        payload = json.dumps(body).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(payload)))
+        for k, v in headers.items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(payload)
+
+
+def _scripted_server(script):
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), _ScriptedHandler)
+    srv.daemon_threads = True
+    srv.script = list(script)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
+
+
+def test_client_retries_transient_503_then_recovers():
+    srv = _scripted_server([
+        (503, {"error": "rejected", "detail": "full"}, {"Retry-After": "0.01"}),
+        (503, {"error": "shed", "detail": "late"}, {"Retry-After": "0.01"}),
+        (200, {"scores": [3.5]}, {}),
+    ])
+    try:
+        client = GatewayClient(f"http://127.0.0.1:{srv.server_address[1]}",
+                               retries=4, backoff_s=0.01, backoff_cap_s=0.05)
+        scores = client.score([1], [2])
+        assert scores.tolist() == [3.5]
+        assert client.stats["retries_503"] == 2
+        assert client.stats["recovered"] == 1
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_client_raises_typed_errors_without_retrying_non_503():
+    srv = _scripted_server([
+        (504, {"error": "timeout", "detail": "budget"}, {}),
+        (500, {"error": "failed", "detail": "boom"}, {}),
+        (503, {"error": "rejected", "detail": "full"}, {}),
+        (503, {"error": "rejected", "detail": "full"}, {}),
+    ])
+    try:
+        url = f"http://127.0.0.1:{srv.server_address[1]}"
+        client = GatewayClient(url, retries=1, backoff_s=0.01,
+                               backoff_cap_s=0.02)
+        with pytest.raises(Timeout):
+            client.score([1], [2])
+        with pytest.raises(Failed):
+            client.score([1], [2])
+        # retries exhausted on persistent 503 -> typed Rejected, not a hang
+        with pytest.raises(Rejected):
+            client.score([1], [2])
+        assert client.stats["retries_503"] == 1
+    finally:
+        srv.shutdown()
+        srv.server_close()

@@ -203,6 +203,78 @@ def test_latency_accounting_virtual_time():
 
 
 # ---------------------------------------------------------------------------
+# scheduler concurrency (gateway-facing guarantees)
+# ---------------------------------------------------------------------------
+def test_concurrent_submit_admits_exactly_max_queue():
+    import threading
+
+    Q, threads_n, per_thread = 16, 8, 10
+    b = ContinuousBatcher(SchedulerConfig(max_batch=4, max_queue=Q),
+                          VirtualClock())
+    reqs = []
+    lock = threading.Lock()
+
+    def submitter(k):
+        mine = [b.submit({"t": k, "i": i}) for i in range(per_thread)]
+        with lock:
+            reqs.extend(mine)
+
+    ts = [threading.Thread(target=submitter, args=(k,))
+          for k in range(threads_n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(30.0)
+    assert len(reqs) == threads_n * per_thread
+    admitted = [r for r in reqs if r.status == "queued"]
+    rejected = [r for r in reqs if r.status == "rejected"]
+    assert len(admitted) == Q == b.depth
+    assert len(rejected) == threads_n * per_thread - Q
+    assert b.metrics.counters["admitted"] == Q
+    # rejects resolve synchronously: nobody ever blocks on them
+    assert all(r.done.is_set() for r in rejected)
+    assert not any(r.done.is_set() for r in admitted)
+
+
+def test_edf_equal_deadlines_stable_arrival_order():
+    clock = VirtualClock()
+    b = ContinuousBatcher(SchedulerConfig(max_batch=8, max_queue=16), clock)
+    # same virtual arrival instant AND same deadline: ties must break by
+    # submission order (rid), not dict/sort accidents
+    reqs = [b.submit(i, deadline_s=1.0) for i in range(6)]
+    batch = b.next_batch()
+    assert [r.payload for r in batch] == list(range(6))
+    assert [r.rid for r in batch] == [r.rid for r in reqs]
+
+
+def test_shed_and_completed_requests_resolve_events():
+    clock = VirtualClock()
+    b = ContinuousBatcher(SchedulerConfig(max_batch=2, max_queue=8), clock)
+    doomed = b.submit("doomed", deadline_s=0.01)
+    kept = b.submit("kept", deadline_s=10.0)
+    assert not doomed.done.is_set() and not kept.done.is_set()
+    clock.advance(0.1)
+    batch = b.next_batch()
+    assert doomed.status == "shed" and doomed.done.is_set()
+    assert doomed.wait(0.0) and doomed.finished is not None
+    assert not kept.done.is_set()            # running, not terminal
+    b.complete(batch, ["ok"])
+    assert kept.done.is_set() and kept.result == "ok"
+
+
+def test_failed_batch_resolves_events_with_error():
+    b = ContinuousBatcher(SchedulerConfig(max_batch=4, max_queue=8),
+                          VirtualClock())
+    reqs = [b.submit(i) for i in range(3)]
+    batch = b.next_batch()
+    boom = RuntimeError("forward exploded")
+    b.fail(batch, boom)
+    assert all(r.status == "failed" and r.done.is_set() and r.error is boom
+               for r in reqs)
+    assert b.metrics.counters["failed"] == 3
+
+
+# ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------
 def test_histogram_percentiles_and_json(tmp_path):
@@ -227,6 +299,51 @@ def test_histogram_percentiles_and_json(tmp_path):
 # ---------------------------------------------------------------------------
 # engines
 # ---------------------------------------------------------------------------
+def test_histogram_overflow_bucket_reports_exact_max():
+    """Regression: samples past the last finite edge (~134s) used to read
+    back the last edge for any percentile landing in the overflow bucket —
+    now they fall back to the exact tracked max."""
+    from repro.serve.metrics import LatencyHistogram, _EDGES
+
+    h = LatencyHistogram()
+    for v in [0.001] * 98 + [200.0, 500.0]:
+        h.observe(v)
+    # any percentile landing in the overflow bucket reports the exact max
+    # (not the ~134s last edge, and not a quantized estimate)
+    assert h.percentile(99) == pytest.approx(500.0)
+    assert h.percentile(100) == pytest.approx(500.0)
+    assert h.percentile(50) <= 0.002          # mid-range unaffected
+    # only overflow samples: every percentile reports the exact max
+    h2 = LatencyHistogram()
+    h2.observe(float(_EDGES[-1]) * 4)
+    h2.observe(float(_EDGES[-1]) * 8)
+    for p in (50, 99, 100):
+        assert h2.percentile(p) == pytest.approx(float(_EDGES[-1]) * 8)
+
+
+def test_metrics_thread_safe_under_concurrent_mutation():
+    import threading
+
+    m = ServeMetrics()
+    N, per = 8, 500
+
+    def hammer(k):
+        for i in range(per):
+            m.count("hot_hits")
+            m.observe("e2e", 0.001 * (k + 1))
+            m.gauge("last", float(i))
+
+    ts = [threading.Thread(target=hammer, args=(k,)) for k in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(30.0)
+    snap = m.snapshot()
+    assert snap["counters"]["hot_hits"] == N * per
+    assert snap["latency"]["e2e"]["count"] == N * per
+    assert snap["latency"]["e2e"]["max_s"] == pytest.approx(0.008)
+
+
 def test_recsys_engine_matches_dense_serve_scores():
     """Cache-fed serving == the reference dense-table forward."""
     import jax
