@@ -1,4 +1,4 @@
-.PHONY: test quick slow verify serve-smoke gateway-smoke gateway
+.PHONY: test quick slow verify serve-smoke gateway-smoke chaos-smoke gateway
 
 # full tier-1 suite (same command ROADMAP.md documents)
 test:
@@ -26,6 +26,14 @@ serve-smoke:
 # shed-load tail bound and 503-retry recovery; emits BENCH_gateway.json
 gateway-smoke:
 	PYTHONPATH=src python -m benchmarks.gateway_smoke --out BENCH_gateway.json
+
+# seeded fault-injection run of the gateway stack (non-tier-1): request
+# conservation under crashes/resets/latency spikes, supervisor restarts ==
+# injected pump deaths, breaker-bounded 500 tail, same-seed injection-log
+# determinism, and warm-restart snapshot hit-rate recovery; emits
+# BENCH_chaos.json
+chaos-smoke:
+	PYTHONPATH=src python -m benchmarks.chaos_smoke --out BENCH_chaos.json
 
 # launch the gateway for manual poking (recsys engine on :8077):
 #   curl -s -XPOST localhost:8077/v1/score -d '{"hist":[1,2,3],"candidates":[4,5]}'

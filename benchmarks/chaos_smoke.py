@@ -1,0 +1,404 @@
+"""`make chaos-smoke` — seeded fault-injection run of the gateway stack.
+
+`gateway_smoke` proves the serving stack under *healthy* conditions; this
+benchmark proves the resilience layer under injected faults, in four
+phases over real threads and loopback sockets:
+
+1. **fault phase** — the recsys engine is wrapped in ``ChaosEngine``
+   (seeded forward errors, latency spikes, ``next_batch`` pump crashes)
+   behind a supervised pump, and driven by a ``ChaosClient`` that injects
+   post-execution connection resets (the double-execution hazard).
+   Asserts *conservation*: every request reaches exactly one terminal
+   outcome, zero hangs, server-side admitted == completed+shed+failed;
+   the supervisor restarted **every** injected pump crash; client-visible
+   500s stay bounded by the injected forward-error count; and at least
+   one reset retry was answered from the idempotency dedupe instead of
+   re-executing.
+2. **breaker phase** — the engine is flipped to fail persistently;
+   with ``failure_threshold`` k, exactly k requests pay a 500 and every
+   subsequent request sheds instantly with 503 (the engine's forward is
+   *not* called — the 500 tail is bounded); after the fault clears and
+   the cooldown elapses, a half-open probe closes the breaker again.
+3. **determinism** — the fault phase's schedule is replayed end-to-end
+   twice with the same seed; the two ``InjectionLog``s (and the outcome
+   tallies) must be identical.
+4. **warm restart** — a gateway with ``snapshot_dir`` warms its GRASP
+   cache on a zipf stream, measures a closed-loop probe hit rate, drains
+   (snapshot saved), and a *fresh* engine+gateway restores the snapshot:
+   the same probe's hit rate must be within 1 point of the pre-restart
+   baseline, while a cold-started control shows the re-paid misses.
+
+Emits all four phases plus a verdict to ``BENCH_chaos.json``.
+
+    PYTHONPATH=src python -m benchmarks.chaos_smoke [--out BENCH_chaos.json]
+
+Non-tier-1: wired into scripts/verify.sh after gateway_smoke. Wall-clock
+is bounded: every join carries a timeout and all load is finite.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.gateway_smoke import CANDIDATES, _make_engine, _payloads
+from repro.chaos import ChaosClient, ChaosEngine, FaultSchedule, FaultSpec
+from repro.gateway import (
+    EnginePump,
+    GatewayClient,
+    GatewayError,
+    GatewayServer,
+    Unavailable,
+)
+from repro.serve.scheduler import SchedulerConfig
+
+JOIN_TIMEOUT_S = 120.0
+
+FAULT_SPEC = FaultSpec(
+    seed=42,
+    forward_error_rate=0.06,
+    latency_spike_rate=0.05,
+    latency_spike_s=0.02,
+    pump_crash_rate=0.04,
+    conn_reset_rate=0.08,
+)
+
+SUPERVISOR_CONFIG = dict(
+    check_interval_s=0.005,
+    wedge_timeout_s=10.0,          # >> the injected 20ms spikes
+    backoff_s=0.01,
+    backoff_cap_s=0.05,
+    crash_loop_threshold=10_000,   # sustained injection must keep restarting
+)
+
+
+def _run_workload(requests: int, workers: int, spec: FaultSpec,
+                  breaker: bool):
+    """One supervised chaos run: returns (outcomes, schedule, server-side
+    snapshot, supervisor stats, client stats, dedupe stats)."""
+    sched = SchedulerConfig(max_batch=8, max_queue=64)
+    engine = _make_engine(pace_s=0.0, sched=sched)
+    schedule = FaultSchedule(spec)
+    chaos = ChaosEngine(engine, schedule)
+    server = GatewayServer(
+        {"score": EnginePump(chaos, "score")},
+        supervisor_config=SUPERVISOR_CONFIG,
+        breaker=breaker,
+        breaker_config={"failure_threshold": 3, "cooldown_s": 0.1},
+    ).start()
+    client = ChaosClient(server.url, schedule, reset_mode="post",
+                         timeout_s=20.0, retries=8, backoff_s=0.02,
+                         backoff_cap_s=0.2)
+    payloads = _payloads(engine.cfg, requests, seed=3)
+    outcomes = {"done": 0, "failed": 0, "rejected": 0, "shed": 0,
+                "unavailable": 0, "timeout": 0, "error": 0}
+    order = [None] * requests
+    out_lock = threading.Lock()
+    it = iter(range(requests))
+
+    def worker():
+        while True:
+            with out_lock:
+                i = next(it, None)
+            if i is None:
+                return
+            try:
+                s = client.score(payloads[i]["hist"],
+                                 payloads[i]["candidates"], timeout_s=20.0)
+                assert s.shape == (CANDIDATES,) and np.isfinite(s).all()
+                kind = "done"
+            except GatewayError as e:
+                kind = e.kind if e.kind in outcomes else "error"
+            except Exception:  # noqa: BLE001 — tally, never die silently
+                kind = "error"
+            with out_lock:
+                outcomes[kind] += 1
+                order[i] = kind
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_TIMEOUT_S)
+    hung = sum(t.is_alive() for t in threads)
+    sup = server.supervisors["score"]
+    sup_stats = sup.stats()
+    dedupe_stats = server.dedupe.stats()
+    breaker_stats = (server.breakers["score"].stats() if breaker else None)
+    server.stop()
+    snap = engine.metrics.snapshot()
+    assert hung == 0, f"chaos: {hung} worker(s) hung"
+    return {
+        "outcomes": outcomes,
+        "order": order,
+        "injections": schedule.log.summary(),
+        "log": schedule.log.entries(),
+        "supervisor": sup_stats,
+        "client": dict(client.stats),
+        "dedupe": dedupe_stats,
+        "breaker": breaker_stats,
+        "snapshot": snap,
+    }
+
+
+# ---------------------------------------------------------------------------
+# phase 1: conservation + supervision under the full fault schedule
+# ---------------------------------------------------------------------------
+def fault_phase(requests: int = 192, workers: int = 4):
+    r = _run_workload(requests, workers, FAULT_SPEC, breaker=True)
+    o, inj, c = r["outcomes"], r["injections"], r["snapshot"]["counters"]
+
+    # -- conservation: every request reached exactly one terminal status --
+    assert sum(o.values()) == requests, o
+    assert o["timeout"] == 0 and o["error"] == 0, o
+    # server side: everything admitted was completed, shed, or failed
+    assert c["admitted"] == (c.get("completed", 0) + c.get("shed", 0)
+                             + c.get("failed", 0)), c
+
+    # -- supervision: every injected pump crash was restarted -------------
+    crashes = inj.get("pump_crash", 0)
+    assert crashes > 0, f"schedule injected no pump crashes: {inj}"
+    assert r["supervisor"]["restarts"] == crashes, (r["supervisor"], inj)
+    assert r["supervisor"]["wedges"] == 0, r["supervisor"]
+
+    # -- fault blast radius stays bounded ---------------------------------
+    fwd_errors = inj.get("forward_error", 0)
+    assert fwd_errors > 0, f"schedule injected no forward errors: {inj}"
+    # one injected forward error fails one batch of at most `workers`
+    # in-flight requests (closed loop); the breaker can only shrink this
+    assert o["failed"] <= workers * fwd_errors, (o, inj)
+    assert o["done"] > 0.5 * requests, o   # chaos must not starve serving
+
+    # -- reset retries were deduped, not double-executed ------------------
+    resets = inj.get("conn_reset", 0)
+    assert resets > 0, f"schedule injected no connection resets: {inj}"
+    assert r["client"]["retries_conn"] > 0, r["client"]
+    assert r["dedupe"]["replays"] > 0, (
+        f"no reset retry was answered from the idempotency dedupe: "
+        f"{r['dedupe']} (resets={resets})")
+    return r
+
+
+# ---------------------------------------------------------------------------
+# phase 2: the breaker bounds the 500 tail of a persistent fault
+# ---------------------------------------------------------------------------
+class _Breakable:
+    """Engine wrapper with a persistent-failure switch (not schedule-driven:
+    the breaker phase needs a fault that does NOT go away on its own)."""
+
+    def __init__(self, engine) -> None:
+        self._engine = engine
+        self.batcher = engine.batcher
+        self.failing = False
+        self.forwards = 0
+
+    def forward(self, payloads):
+        self.forwards += 1
+        if self.failing:
+            raise RuntimeError("persistent engine fault (chaos)")
+        return self._engine.forward(payloads)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+def breaker_phase(requests: int = 10, threshold: int = 3,
+                  cooldown_s: float = 0.2):
+    sched = SchedulerConfig(max_batch=8, max_queue=64)
+    engine = _Breakable(_make_engine(pace_s=0.0, sched=sched))
+    server = GatewayServer(
+        {"score": EnginePump(engine, "score")},
+        breaker_config={"failure_threshold": threshold,
+                        "cooldown_s": cooldown_s},
+    ).start()
+    client = GatewayClient(server.url, timeout_s=20.0, retries=0)
+    payloads = _payloads(engine.cfg, requests + 1, seed=5)
+
+    engine.failing = True
+    tail = []
+    for i in range(requests):
+        try:
+            client.score(payloads[i]["hist"], payloads[i]["candidates"],
+                         timeout_s=20.0)
+            tail.append("done")
+        except GatewayError as e:
+            tail.append(e.kind)
+    forwards_during_fault = engine.forwards
+
+    # exactly `threshold` requests paid a 500; the rest shed instantly
+    # with 503 and never touched the engine — the tail is bounded
+    assert tail == ["failed"] * threshold + ["unavailable"] * (
+        requests - threshold), tail
+    assert forwards_during_fault == threshold, forwards_during_fault
+    stats_open = server.breakers["score"].stats()
+    assert stats_open["state"] == "open" and stats_open["opened"] == 1
+
+    # fault clears; after the cooldown the half-open probe closes it again
+    engine.failing = False
+    time.sleep(cooldown_s + 0.05)
+    s = client.score(payloads[requests]["hist"],
+                     payloads[requests]["candidates"], timeout_s=20.0)
+    assert np.isfinite(s).all()
+    stats_closed = server.breakers["score"].stats()
+    assert stats_closed["state"] == "closed", stats_closed
+    server.stop()
+    return {"tail": tail, "forwards_during_fault": forwards_during_fault,
+            "threshold": threshold, "breaker_open": stats_open,
+            "breaker_closed": stats_closed}
+
+
+# ---------------------------------------------------------------------------
+# phase 3: same seed => identical injection logs (and identical outcomes)
+# ---------------------------------------------------------------------------
+def determinism_phase(requests: int = 64):
+    spec = FaultSpec(seed=7, forward_error_rate=0.08, latency_spike_rate=0.05,
+                     latency_spike_s=0.005, pump_crash_rate=0.06,
+                     conn_reset_rate=0.10)
+    # sequential (1 worker) + no breaker: the request->fault mapping is then
+    # a pure function of the seed, so the whole run replays bit-identically
+    runs = [_run_workload(requests, workers=1, spec=spec, breaker=False)
+            for _ in range(2)]
+    log_a, log_b = runs[0]["log"], runs[1]["log"]
+    assert len(log_a) > 0, "determinism schedule fired nothing"
+    assert log_a == log_b, (
+        f"same-seed runs diverged: {len(log_a)} vs {len(log_b)} events; "
+        f"first diff {next((x for x in zip(log_a, log_b) if x[0] != x[1]), None)}")
+    assert runs[0]["order"] == runs[1]["order"], "outcome sequences diverged"
+    return {"events": len(log_a), "injections": runs[0]["injections"],
+            "outcomes": runs[0]["outcomes"], "identical": True}
+
+
+# ---------------------------------------------------------------------------
+# phase 4: warm-restart snapshot recovers the pre-crash hit rate
+# ---------------------------------------------------------------------------
+def _drive(client, payloads, timeout_s=20.0):
+    for p in payloads:
+        client.score(p["hist"], p["candidates"], timeout_s=timeout_s)
+
+
+def _probe_hit_rate(engine, client, payloads):
+    """Closed-loop hit rate over `payloads`, from counter deltas."""
+    def refs(c):
+        return (c.get("hot_hits", 0), c.get("cold_hits", 0), c.get("misses", 0))
+
+    before = refs(engine.metrics.snapshot()["counters"])
+    _drive(client, payloads)
+    after = refs(engine.metrics.snapshot()["counters"])
+    hot, cold, miss = (a - b for a, b in zip(after, before))
+    return (hot + cold) / (hot + cold + miss)
+
+
+def warm_restart_phase(warm_requests: int = 128, probe_requests: int = 64):
+    sched = SchedulerConfig(max_batch=8, max_queue=256)
+    snapdir = tempfile.mkdtemp(prefix="chaos_snap_")
+    # pre-crash epoch: warm the cache, then measure the closed-loop probe
+    eng1 = _make_engine(pace_s=0.0, sched=sched)
+    warm = _payloads(eng1.cfg, warm_requests, seed=11)
+    probe = _payloads(eng1.cfg, probe_requests, seed=13)
+    server1 = GatewayServer({"score": EnginePump(eng1, "score")},
+                            snapshot_dir=snapdir).start()
+    client1 = GatewayClient(server1.url, timeout_s=20.0)
+    _drive(client1, warm)
+    hit_pre = _probe_hit_rate(eng1, client1, probe)
+    server1.stop()     # graceful drain -> snapshot saved
+    snap_path = os.path.join(snapdir, "score.cache.json")
+    assert os.path.exists(snap_path), "drain did not write the cache snapshot"
+
+    # warm restart: a FRESH engine restores the snapshot on startup
+    eng2 = _make_engine(pace_s=0.0,
+                        sched=SchedulerConfig(max_batch=8, max_queue=256))
+    server2 = GatewayServer({"score": EnginePump(eng2, "score")},
+                            snapshot_dir=snapdir).start()
+    assert eng2.metrics.snapshot()["counters"].get("snapshot_restores") == 1, \
+        "warm restart did not restore the snapshot"
+    client2 = GatewayClient(server2.url, timeout_s=20.0)
+    hit_post = _probe_hit_rate(eng2, client2, probe)
+    server2.stop()
+
+    # cold-restart control: same fresh engine, no snapshot
+    eng3 = _make_engine(pace_s=0.0,
+                        sched=SchedulerConfig(max_batch=8, max_queue=256))
+    server3 = GatewayServer({"score": EnginePump(eng3, "score")}).start()
+    client3 = GatewayClient(server3.url, timeout_s=20.0)
+    hit_cold = _probe_hit_rate(eng3, client3, probe)
+    server3.stop()
+
+    assert hit_post >= hit_pre - 0.01, (
+        f"post-restore hit rate {hit_post:.2%} fell more than 1pt below "
+        f"the pre-crash baseline {hit_pre:.2%}")
+    assert hit_post >= hit_cold, (
+        f"warm restart ({hit_post:.2%}) must not lose to a cold start "
+        f"({hit_cold:.2%})")
+    return {"hit_pre": hit_pre, "hit_post": hit_post, "hit_cold": hit_cold,
+            "delta_pt": (hit_post - hit_pre) * 100.0,
+            "cold_penalty_pt": (hit_pre - hit_cold) * 100.0,
+            "snapshot_path": snap_path}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--requests", type=int, default=192,
+                    help="fault-phase request count")
+    args = ap.parse_args(argv)
+
+    fault = fault_phase(args.requests)
+    o, inj = fault["outcomes"], fault["injections"]
+    print(f"[chaos-smoke] fault phase: {sum(o.values())} requests conserved "
+          f"(done={o['done']} failed={o['failed']} 503s="
+          f"{o['rejected'] + o['shed'] + o['unavailable']}); injected "
+          f"{inj.get('pump_crash', 0)} crashes -> "
+          f"{fault['supervisor']['restarts']} restarts; "
+          f"{inj.get('conn_reset', 0)} resets -> "
+          f"{fault['dedupe']['replays']} deduped replays")
+
+    brk = breaker_phase()
+    print(f"[chaos-smoke] breaker: persistent fault paid "
+          f"{brk['forwards_during_fault']} x 500 (threshold="
+          f"{brk['threshold']}), then shed 503 until recovery probe closed "
+          f"the circuit")
+
+    det = determinism_phase()
+    print(f"[chaos-smoke] determinism: 2 same-seed runs, "
+          f"{det['events']} injections each, logs identical")
+
+    warm = warm_restart_phase()
+    print(f"[chaos-smoke] warm restart: hit {warm['hit_pre']:.2%} pre-crash, "
+          f"{warm['hit_post']:.2%} restored ({warm['delta_pt']:+.2f}pt), "
+          f"{warm['hit_cold']:.2%} cold control "
+          f"(penalty {warm['cold_penalty_pt']:.2f}pt)")
+
+    fault.pop("log", None)
+    fault.pop("order", None)
+    fault.pop("snapshot", None)
+    out = {
+        "fault_phase": fault,
+        "breaker_phase": brk,
+        "determinism": det,
+        "warm_restart": warm,
+        "verdict": {
+            "requests_conserved": True,
+            "restarts_match_crashes": True,
+            "deduped_replays": fault["dedupe"]["replays"],
+            "breaker_500_tail": brk["forwards_during_fault"],
+            "injection_log_deterministic": det["identical"],
+            "hit_pre": warm["hit_pre"],
+            "hit_post": warm["hit_post"],
+            "hit_cold": warm["hit_cold"],
+            "restore_delta_pt": warm["delta_pt"],
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"[chaos-smoke] OK — wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()  # assertion failure -> traceback + non-zero exit

@@ -19,4 +19,10 @@ PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
 # bound + 503-retry recovery); bounded wall-clock, emits BENCH_gateway.json
 PYTHONPATH=src timeout 600 python -m benchmarks.gateway_smoke --out BENCH_gateway.json
 
+# non-tier-1: seeded fault injection over the same stack (conservation
+# under crashes/resets, supervisor restarts == injected deaths, breaker
+# 500-tail bound, same-seed determinism, warm-restart snapshot recovery);
+# bounded wall-clock, emits BENCH_chaos.json
+PYTHONPATH=src timeout 600 python -m benchmarks.chaos_smoke --out BENCH_chaos.json
+
 echo "verify: OK"

@@ -1,0 +1,28 @@
+"""repro.chaos — deterministic fault injection for the serving stack.
+
+``inject`` wraps a serve engine (forward exceptions, latency spikes,
+``next_batch`` pump crashes) and the gateway client (connection resets)
+behind a seeded, replayable ``FaultSchedule``: every injection decision
+is a pure function of ``(seed, fault kind, call index)``, so the same
+schedule driven through the same workload produces an identical
+``InjectionLog`` — which is exactly what `make chaos-smoke` asserts.
+See ``benchmarks/chaos_smoke.py`` for the end-to-end harness and
+``src/repro/gateway/README.md`` for the failure-modes table.
+"""
+from repro.chaos.inject import (
+    ChaosClient,
+    ChaosEngine,
+    FaultSchedule,
+    FaultSpec,
+    InjectedFault,
+    InjectionLog,
+)
+
+__all__ = [
+    "ChaosClient",
+    "ChaosEngine",
+    "FaultSchedule",
+    "FaultSpec",
+    "InjectedFault",
+    "InjectionLog",
+]

@@ -1,12 +1,17 @@
 """repro.gateway — async RPC serving front-end for the repro.serve tier.
 
 ``pump`` runs one background thread per engine that continuously drains
-the continuous batcher; ``server`` is the stdlib ThreadingHTTPServer
-JSON-RPC front-end (``/v1/generate``, ``/v1/score``, ``/healthz``,
-``/metrics``); ``client`` is the urllib client with typed errors and
-bounded-backoff retries on 503; ``errors`` is the shared taxonomy. See
-README.md in this directory for the architecture and drain protocol.
+the continuous batcher; ``supervisor`` is the watchdog that detects
+dead/wedged pump threads and restarts them with backoff; ``breaker`` is
+the per-route circuit breaker that sheds a persistently failing engine
+fast; ``server`` is the stdlib ThreadingHTTPServer JSON-RPC front-end
+(``/v1/generate``, ``/v1/score``, ``/healthz``, ``/metrics``) with
+idempotency-key dedupe and warm-restart cache snapshots; ``client`` is
+the urllib client with typed errors and bounded-backoff retries on 503;
+``errors`` is the shared taxonomy. See README.md in this directory for
+the architecture, the drain protocol, and the failure-modes table.
 """
+from repro.gateway.breaker import CircuitBreaker
 from repro.gateway.client import GatewayClient
 from repro.gateway.errors import (
     Failed,
@@ -14,18 +19,24 @@ from repro.gateway.errors import (
     Rejected,
     Shed,
     Timeout,
+    Unavailable,
     error_for_status,
 )
 from repro.gateway.pump import EnginePump
-from repro.gateway.server import GatewayServer
+from repro.gateway.server import GatewayServer, IdempotencyCache
+from repro.gateway.supervisor import PumpSupervisor
 
 __all__ = [
     "EnginePump",
+    "PumpSupervisor",
+    "CircuitBreaker",
     "GatewayServer",
+    "IdempotencyCache",
     "GatewayClient",
     "GatewayError",
     "Rejected",
     "Shed",
+    "Unavailable",
     "Timeout",
     "Failed",
     "error_for_status",

@@ -1,17 +1,28 @@
 """urllib-based gateway client: typed errors, per-request timeouts, and
 bounded exponential-backoff retries on 503.
 
-503 is the gateway's backpressure signal (admission-control reject or
-deadline shed — both transient by construction: load moves, deadlines
-reset on re-entry), so the client absorbs up to ``retries`` of them with
+503 is the gateway's backpressure signal (admission-control reject,
+deadline shed, or an open circuit breaker — all transient by
+construction: load moves, deadlines reset on re-entry, breakers cool
+down), so the client absorbs up to ``retries`` of them with
 ``backoff_s * factor**attempt`` sleeps capped at ``backoff_cap_s``, then
-raises the typed error from the *last* response (``Rejected`` or ``Shed``
-from ``gateway.errors``). 504 and socket-level timeouts raise ``Timeout``
-immediately; 500 raises ``Failed`` immediately — retrying a crashed batch
-only re-crashes it.
+raises the typed error from the *last* response (``Rejected``, ``Shed``
+or ``Unavailable`` from ``gateway.errors``). 504 and socket-level
+timeouts raise ``Timeout`` immediately; 500 raises ``Failed`` immediately
+— retrying a crashed batch only re-crashes it. A malformed ``Retry-After``
+header is ignored (computed backoff applies), never a crash.
+
+Every POST carries a client-generated ``Idempotency-Key`` header, held
+constant across that logical request's retries: a retry after a
+connection reset may re-send a request the server already executed, and
+the key lets the server-side dedupe LRU replay the recorded outcome
+instead of double-executing ``/v1/generate``.
 
 ``stats`` counts attempts/retries/recoveries (thread-safe), which is how
-the smoke benchmark asserts that transient 503s actually recover.
+the smoke benchmarks assert that transient 503s actually recover. The
+single-attempt transport lives in the ``_open`` hook so chaos tooling
+(``repro.chaos.ChaosClient``) can inject connection resets underneath
+the retry loop.
 """
 from __future__ import annotations
 
@@ -22,11 +33,25 @@ import threading
 import time
 import urllib.error
 import urllib.request
+import uuid
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.gateway.errors import GatewayError, Timeout, error_for_status
+
+
+def _parse_retry_after(value: Optional[str]) -> Optional[float]:
+    """Defensive Retry-After parse: seconds as float, else None (callers
+    fall back to the computed backoff). The header reaches us from the
+    network — a malformed value must never crash the retry loop."""
+    if not value:
+        return None
+    try:
+        parsed = float(value)
+    except (TypeError, ValueError):
+        return None
+    return parsed if parsed >= 0.0 and np.isfinite(parsed) else None
 
 
 class GatewayClient:
@@ -58,23 +83,32 @@ class GatewayClient:
         return min(self.backoff_cap_s,
                    self.backoff_s * self.backoff_factor ** attempt)
 
+    def _open(self, req: urllib.request.Request, timeout: float) -> Dict:
+        """One transport attempt: send, read, parse. Overridable hook —
+        ``repro.chaos.ChaosClient`` injects connection resets here."""
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return json.loads(resp.read())
+
     def _request(self, path: str, obj: Optional[Dict] = None,
                  timeout_s: Optional[float] = None,
-                 retry: bool = True) -> Dict:
+                 retry: bool = True, raise_for_status: bool = True) -> Dict:
         url = self.base_url + path
         data = None if obj is None else json.dumps(obj).encode()
         timeout = self.timeout_s if timeout_s is None else float(timeout_s)
         max_attempts = (self.retries if retry else 0) + 1
         last_err: Optional[GatewayError] = None
+        headers = {"Content-Type": "application/json"}
+        if data is not None:
+            # one key per *logical* request, constant across its retries:
+            # the server's dedupe LRU replays instead of re-executing
+            headers["Idempotency-Key"] = uuid.uuid4().hex
         for attempt in range(max_attempts):
             self._count("attempts")
             req = urllib.request.Request(
-                url, data=data,
-                headers={"Content-Type": "application/json"},
+                url, data=data, headers=headers,
                 method="POST" if data is not None else "GET")
             try:
-                with urllib.request.urlopen(req, timeout=timeout) as resp:
-                    out = json.loads(resp.read())
+                out = self._open(req, timeout)
                 if attempt > 0:
                     self._count("recovered")
                 return out
@@ -83,11 +117,13 @@ class GatewayClient:
                     body = json.loads(e.read())
                 except (json.JSONDecodeError, ValueError):
                     body = {}
-                retry_after = e.headers.get("Retry-After")
+                if not raise_for_status:
+                    return body      # status report, not an error (healthz)
                 last_err = error_for_status(
                     body.get("error", "error"),
                     body.get("detail", f"HTTP {e.code} from {path}"),
-                    retry_after_s=(float(retry_after) if retry_after else None))
+                    retry_after_s=_parse_retry_after(
+                        e.headers.get("Retry-After")))
                 if e.code != 503 or attempt + 1 >= max_attempts:
                     raise last_err from None
                 self._count("retries_503")
@@ -149,7 +185,10 @@ class GatewayClient:
         return list(out["tokens"])
 
     def health(self) -> Dict:
-        return self._request("/healthz", retry=False)
+        """Readiness probe. Unlike the serving routes, a non-2xx here is a
+        *report*, not an error: a degraded gateway answers 503 with the
+        same JSON body, which callers want to inspect, not catch."""
+        return self._request("/healthz", retry=False, raise_for_status=False)
 
     def metrics(self) -> Dict:
         return self._request("/metrics", retry=False)

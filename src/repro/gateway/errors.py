@@ -13,15 +13,20 @@ client can reconstruct server-side outcomes without parsing prose:
   Shed       admitted but its deadline expired in  503
              queue — retryable (a retry re-enters
              with a fresh deadline)
+  Unavailable the route's circuit breaker is open  503
+             (persistent engine faults) or its
+             pump is crash-looping — retryable
+             after the breaker's cooldown
   Timeout    the caller's wait/deadline elapsed    504
              before the request resolved
   Failed     the engine forward raised — not       500
              retryable by default
   ========== ===================================== ===========
 
-Both 503 flavours are *transient*: the client's bounded exponential
+All 503 flavours are *transient*: the client's bounded exponential
 backoff retries them. ``retry_after_s`` carries the server's Retry-After
-hint when one was given.
+hint when one was given (for ``Unavailable`` it is the breaker's
+remaining cooldown — retrying sooner is guaranteed to shed again).
 """
 from __future__ import annotations
 
@@ -54,6 +59,14 @@ class Shed(GatewayError):
     kind = "shed"
 
 
+class Unavailable(GatewayError):
+    """The route is shedding fast: circuit breaker open after persistent
+    engine faults, or the pump is crash-looping beyond its restart budget."""
+
+    http_status = 503
+    kind = "unavailable"
+
+
 class Timeout(GatewayError):
     """The caller's wait budget elapsed before the request resolved."""
 
@@ -68,7 +81,7 @@ class Failed(GatewayError):
     kind = "failed"
 
 
-_BY_KIND = {c.kind: c for c in (Rejected, Shed, Timeout, Failed)}
+_BY_KIND = {c.kind: c for c in (Rejected, Shed, Unavailable, Timeout, Failed)}
 
 
 def error_for_status(status: str, message: str = "",

@@ -8,31 +8,59 @@ the server merely translates its outcomes onto the wire:
 
   ``POST /v1/generate``  LM prefill+decode   {"tokens": [...]} -> {"tokens": [[...], ...]}
   ``POST /v1/score``     recsys scoring      {"hist": [...], "candidates": [...]} -> {"scores": [...]}
-  ``GET  /healthz``      liveness + drain state
-  ``GET  /metrics``      per-engine ``ServeMetrics.snapshot()``
+  ``GET  /healthz``      readiness: 200 ok / 503 degraded-draining-unhealthy
+  ``GET  /metrics``      per-engine ``ServeMetrics.snapshot()`` + gateway internals
 
-Error mapping (see ``gateway.errors``): admission-control rejects and
-deadline sheds answer **503** with a ``Retry-After`` hint — the
-backpressure signal the client's bounded exponential backoff keys on;
-caller-budget expiry answers 504; an engine fault answers 500. Request
-bodies may carry ``deadline_ms`` (queue deadline, defaults to the
-scheduler's) and ``timeout_s`` (caller wait budget).
+Error mapping (see ``gateway.errors``): admission-control rejects,
+deadline sheds, and open circuit breakers answer **503** with a
+``Retry-After`` hint — the backpressure signal the client's bounded
+exponential backoff keys on; caller-budget expiry answers 504; an engine
+fault answers 500. Request bodies may carry ``deadline_ms`` (queue
+deadline, defaults to the scheduler's) and ``timeout_s`` (caller wait
+budget).
+
+Resilience layers on the request path (each defaults on, each optional):
+
+- **supervision** — a ``PumpSupervisor`` per pump restarts dead/wedged
+  pump threads with backoff; ``/healthz`` answers 503 while any pump
+  thread is dead or crash-looping (previously a dead pump kept reporting
+  healthy while every request timed out);
+- **circuit breaker** — per route: ``failure_threshold`` consecutive
+  engine 500s open it, requests then shed immediately with 503 +
+  Retry-After (= remaining cooldown), a half-open probe closes it on the
+  first success;
+- **idempotency dedupe** — POSTs carrying an ``Idempotency-Key`` header
+  are deduplicated through a bounded LRU: a retry of an already-executed
+  request replays the recorded outcome (marked ``"idempotent_replay"``)
+  instead of double-executing; a retry racing the original blocks on its
+  completion. Retryable outcomes (503) are not pinned — a later retry
+  re-executes against hopefully-better conditions;
+- **warm-restart snapshots** — with ``snapshot_dir`` set, ``stop()``
+  saves each engine's GRASP cache state (``serve.cache.snapshot()``) and
+  ``start()`` restores it, so a restarted gateway recovers its pre-crash
+  hit rate instead of re-paying cold-start misses. A corrupt/mismatched
+  snapshot is discarded (cold start), never trusted.
 
 ``stop()`` is the graceful-drain protocol: mark draining (new requests are
-rejected with 503), ``close()`` every pump (stop admissions, finish
-in-flight batches, join the pump thread), then shut the listener down.
+rejected with 503), stop the supervisors (shutdown is not a crash), then
+``close()`` every pump (stop admissions, finish in-flight batches, join
+the pump thread), snapshot the caches, and shut the listener down.
 """
 from __future__ import annotations
 
+import collections
 import json
+import os
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.gateway.errors import GatewayError, Rejected
+from repro.gateway.breaker import CircuitBreaker
+from repro.gateway.errors import Failed, GatewayError, Rejected, Unavailable
 from repro.gateway.pump import EnginePump
+from repro.gateway.supervisor import PumpSupervisor
 
 
 class _BadRequest(Exception):
@@ -45,6 +73,69 @@ class _HTTPServer(ThreadingHTTPServer):
     # burst would see connection resets before admission control ever runs
     request_queue_size = 1024
     gateway: "GatewayServer"
+
+
+class _IdemEntry:
+    """One in-flight or completed idempotent request."""
+
+    __slots__ = ("event", "response")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.response: Optional[Tuple[int, Dict, Dict]] = None
+
+
+class IdempotencyCache:
+    """Bounded LRU of idempotency-keyed outcomes.
+
+    ``begin`` either registers the caller as the *primary* executor for a
+    key or hands back the existing entry (a duplicate: the same logical
+    request re-sent after a connection reset). Duplicates wait on the
+    primary's completion event and replay its recorded ``(code, body,
+    headers)``. Outcomes the client is expected to retry (503) are
+    dropped after resolution — pinning a shed under its key would turn
+    every retry into a replay of the shed forever.
+    """
+
+    def __init__(self, maxsize: int = 512) -> None:
+        self.maxsize = int(maxsize)
+        self._entries: "collections.OrderedDict[str, _IdemEntry]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.replays = 0             # duplicate requests served from cache
+
+    def begin(self, key: str) -> Tuple[str, _IdemEntry]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.replays += 1
+                return "dup", entry
+            entry = _IdemEntry()
+            self._entries[key] = entry
+            while len(self._entries) > self.maxsize:
+                # evict the oldest *completed* entry; in-flight entries are
+                # skipped (their primaries still need to resolve them)
+                for k, e in self._entries.items():
+                    if e.event.is_set():
+                        del self._entries[k]
+                        break
+                else:
+                    break
+            return "primary", entry
+
+    def resolve(self, key: str, entry: _IdemEntry,
+                code: int, body: Dict, headers: Dict) -> None:
+        entry.response = (code, body, headers)
+        entry.event.set()
+        if code == 503:              # retryable: the retry must re-execute
+            with self._lock:
+                if self._entries.get(key) is entry:
+                    del self._entries[key]
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"entries": len(self._entries), "replays": self.replays}
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -68,11 +159,34 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:
         gw = self.server.gateway
         if self.path == "/healthz":
-            self._send_json(200, gw.health())
+            health = gw.health()
+            self._send_json(200 if health["status"] == "ok" else 503, health)
         elif self.path == "/metrics":
             self._send_json(200, gw.metrics())
         else:
             self._send_json(404, {"error": "not_found", "detail": self.path})
+
+    def _execute(self, gw: "GatewayServer", route) -> Tuple[int, Dict, Dict]:
+        """Run one route; every outcome becomes a (code, body, headers)
+        triple so it can be both sent and recorded for idempotent replay."""
+        try:
+            length = int(self.headers.get("Content-Length") or 0)
+            obj = json.loads(self.rfile.read(length) or b"{}")
+            if not isinstance(obj, dict):
+                raise _BadRequest("body must be a JSON object")
+            return 200, route(obj), {}
+        except _BadRequest as e:
+            return 400, {"error": "bad_request", "detail": str(e)}, {}
+        except (json.JSONDecodeError, ValueError, TypeError) as e:
+            return 400, {"error": "bad_request", "detail": str(e)}, {}
+        except GatewayError as e:
+            headers = {}
+            if e.http_status == 503:
+                headers["Retry-After"] = \
+                    f"{e.retry_after_s or gw.retry_after_s:.3f}"
+            return e.http_status, {"error": e.kind, "detail": str(e)}, headers
+        except Exception as e:  # noqa: BLE001 — surface bugs as 500s
+            return 500, {"error": "error", "detail": repr(e)}, {}
 
     def do_POST(self) -> None:
         gw = self.server.gateway
@@ -80,23 +194,25 @@ class _Handler(BaseHTTPRequestHandler):
         if route is None:
             self._send_json(404, {"error": "not_found", "detail": self.path})
             return
-        try:
-            length = int(self.headers.get("Content-Length") or 0)
-            obj = json.loads(self.rfile.read(length) or b"{}")
-            if not isinstance(obj, dict):
-                raise _BadRequest("body must be a JSON object")
-            self._send_json(200, route(obj))
-        except _BadRequest as e:
-            self._send_json(400, {"error": "bad_request", "detail": str(e)})
-        except (json.JSONDecodeError, ValueError, TypeError) as e:
-            self._send_json(400, {"error": "bad_request", "detail": str(e)})
-        except GatewayError as e:
-            headers = ({"Retry-After": f"{gw.retry_after_s:.3f}"}
-                       if e.http_status == 503 else {})
-            self._send_json(e.http_status,
-                            {"error": e.kind, "detail": str(e)}, headers)
-        except Exception as e:  # noqa: BLE001 — surface bugs as 500s
-            self._send_json(500, {"error": "error", "detail": repr(e)})
+        key = self.headers.get("Idempotency-Key")
+        entry = None
+        if key and gw.dedupe is not None:
+            role, entry = gw.dedupe.begin(key)
+            if role == "dup":
+                # the original may still be executing: wait for its outcome
+                if not entry.event.wait(gw.request_timeout_s + 5.0):
+                    self._send_json(504, {"error": "timeout",
+                                          "detail": "idempotent replay "
+                                                    "timed out"})
+                    return
+                code, body, headers = entry.response
+                self._send_json(code, dict(body, idempotent_replay=True),
+                                headers)
+                return
+        code, body, headers = self._execute(gw, route)
+        if entry is not None:
+            gw.dedupe.resolve(key, entry, code, body, headers)
+        self._send_json(code, body, headers)
 
 
 class GatewayServer:
@@ -106,6 +222,11 @@ class GatewayServer:
     ``/v1/generate`` (an ``LMServeEngine``), ``"score"`` mounts
     ``/v1/score`` (a ``RecsysServeEngine``). ``port=0`` binds an ephemeral
     port — read it back from ``.address``/``.url`` (loopback tests).
+
+    ``supervise``/``breaker``/``dedupe_size``/``snapshot_dir`` switch the
+    resilience layers described in the module docstring;
+    ``supervisor_config``/``breaker_config`` are kwargs forwarded to
+    ``PumpSupervisor``/``CircuitBreaker``.
     """
 
     def __init__(
@@ -115,15 +236,32 @@ class GatewayServer:
         port: int = 0,
         request_timeout_s: float = 30.0,
         retry_after_s: float = 0.05,
+        supervise: bool = True,
+        supervisor_config: Optional[Dict] = None,
+        breaker: bool = True,
+        breaker_config: Optional[Dict] = None,
+        dedupe_size: int = 512,
+        snapshot_dir: Optional[str] = None,
     ) -> None:
         self.pumps = dict(pumps)
         self.request_timeout_s = float(request_timeout_s)
         self.retry_after_s = float(retry_after_s)
+        self.snapshot_dir = snapshot_dir
         self.routes = {}
         if "generate" in self.pumps:
             self.routes["/v1/generate"] = self._generate
         if "score" in self.pumps:
             self.routes["/v1/score"] = self._score
+        self.supervisors: Dict[str, PumpSupervisor] = {}
+        if supervise:
+            self.supervisors = {
+                name: PumpSupervisor(pump, **(supervisor_config or {}))
+                for name, pump in self.pumps.items()}
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        if breaker:
+            self.breakers = {name: CircuitBreaker(**(breaker_config or {}))
+                             for name in self.pumps}
+        self.dedupe = IdempotencyCache(dedupe_size) if dedupe_size else None
         self._draining = False
         self._httpd = _HTTPServer((host, port), _Handler)
         self._httpd.gateway = self
@@ -140,17 +278,54 @@ class GatewayServer:
         host, port = self.address
         return f"http://{host}:{port}"
 
+    def _snapshot_path(self, name: str) -> Optional[str]:
+        if self.snapshot_dir is None:
+            return None
+        return os.path.join(self.snapshot_dir, f"{name}.cache.json")
+
+    def _restore_snapshots(self) -> None:
+        """Warm-start every engine that exposes a GRASP cache; a missing
+        file is a silent cold start, a corrupt/mismatched one is discarded
+        with the cold start noted in the engine's metrics."""
+        from repro.serve.cache import SnapshotError
+
+        for name, pump in self.pumps.items():
+            path = self._snapshot_path(name)
+            cache = getattr(pump.engine, "cache", None)
+            if path is None or cache is None:
+                continue
+            try:
+                cache.load_snapshot(path)
+            except SnapshotError:
+                pump.engine.metrics.count("snapshot_rejected")
+
+    def _save_snapshots(self) -> None:
+        for name, pump in self.pumps.items():
+            path = self._snapshot_path(name)
+            cache = getattr(pump.engine, "cache", None)
+            if path is None or cache is None:
+                continue
+            os.makedirs(self.snapshot_dir, exist_ok=True)
+            cache.save_snapshot(path)
+
     def start(self) -> "GatewayServer":
+        self._restore_snapshots()
         for pump in self.pumps.values():
             pump.start()
+        for sup in self.supervisors.values():
+            sup.start()
         self._thread.start()
         return self
 
     def stop(self, drain_timeout_s: float = 30.0) -> None:
-        """Graceful drain: reject new work, finish in-flight, shut down."""
+        """Graceful drain: reject new work, finish in-flight, snapshot the
+        caches, shut down."""
         self._draining = True
+        for sup in self.supervisors.values():
+            sup.close()              # stand down first: shutdown != crash
         for pump in self.pumps.values():
             pump.close(drain_timeout_s)
+        self._save_snapshots()
         if self._thread.ident is not None:   # shutdown() blocks forever if
             self._httpd.shutdown()           # serve_forever never started
             self._thread.join(5.0)
@@ -164,19 +339,45 @@ class GatewayServer:
 
     # -- introspection ---------------------------------------------------
     def health(self) -> Dict:
+        """Readiness view: ``status == "ok"`` iff every started pump thread
+        is alive and no supervisor is in a crash loop. The /healthz route
+        maps any other status to HTTP 503."""
+        engines = {}
+        ready = True
+        for name, pump in self.pumps.items():
+            sup = self.supervisors.get(name)
+            alive = pump.running
+            dead = pump.started and not alive and not pump.draining
+            crash_looping = sup is not None and not sup.healthy
+            if dead or crash_looping:
+                ready = False
+            engines[name] = {
+                "depth": pump.engine.batcher.depth,
+                "draining": pump.draining,
+                "running": alive,
+                "alive": alive,
+                "generation": pump.generation,
+                "crashes": pump.crashes,
+                "supervisor": sup.stats() if sup is not None else None,
+            }
+        status = ("draining" if self._draining
+                  else "ok" if ready else "unhealthy")
         return {
-            "status": "draining" if self._draining else "ok",
-            "engines": {
-                name: {"depth": pump.engine.batcher.depth,
-                       "draining": pump.draining,
-                       "running": pump.running}
-                for name, pump in self.pumps.items()
-            },
+            "status": status,
+            "ready": status == "ok",
+            "engines": engines,
+            "breakers": {n: b.stats() for n, b in self.breakers.items()},
         }
 
     def metrics(self) -> Dict:
-        return {name: pump.engine.metrics.snapshot()
-                for name, pump in self.pumps.items()}
+        out = {name: pump.engine.metrics.snapshot()
+               for name, pump in self.pumps.items()}
+        out["_gateway"] = {
+            "dedupe": self.dedupe.stats() if self.dedupe else None,
+            "breakers": {n: b.stats() for n, b in self.breakers.items()},
+            "supervisors": {n: s.stats() for n, s in self.supervisors.items()},
+        }
+        return out
 
     # -- routes ----------------------------------------------------------
     def _budgets(self, obj: Dict) -> Tuple[Optional[float], float]:
@@ -184,15 +385,37 @@ class GatewayServer:
         deadline_s = None if deadline_ms is None else float(deadline_ms) / 1e3
         return deadline_s, float(obj.get("timeout_s", self.request_timeout_s))
 
-    def _call(self, pump: EnginePump, payload: Dict, obj: Dict):
+    def _call(self, name: str, payload: Dict, obj: Dict):
         if self._draining:
             raise Rejected("gateway draining")
+        pump = self.pumps[name]
+        sup = self.supervisors.get(name)
+        if sup is not None and not sup.healthy:
+            raise Unavailable(f"{name}: pump crash-looping, shedding")
         deadline_s, timeout_s = self._budgets(obj)
-        return pump.call(payload, deadline_s=deadline_s, timeout=timeout_s)
+        br = self.breakers.get(name)
+        if br is not None:
+            br.before()
+        try:
+            out = pump.call(payload, deadline_s=deadline_s, timeout=timeout_s)
+        except Failed:
+            if br is not None:
+                br.record_failure()
+            raise
+        except GatewayError:             # backpressure/timeout: the scheduler
+            if br is not None:           # doing its job, not an engine fault
+                br.record_neutral()
+            raise
+        except Exception:
+            if br is not None:
+                br.record_failure()
+            raise
+        if br is not None:
+            br.record_success()
+        return out
 
     def _score(self, obj: Dict) -> Dict:
-        pump = self.pumps["score"]
-        cfg = pump.engine.cfg
+        cfg = self.pumps["score"].engine.cfg
         hist = np.asarray(obj.get("hist", []), dtype=np.int64).ravel()
         cand = np.asarray(obj.get("candidates", []), dtype=np.int64).ravel()
         if hist.size == 0 or cand.size == 0:
@@ -211,14 +434,13 @@ class GatewayServer:
             mask[: m.size] &= m[: m.size]
         payload = {"hist": full, "hist_mask": mask,
                    "candidates": cand.astype(np.int32)}
-        scores = self._call(pump, payload, obj)
+        scores = self._call("score", payload, obj)
         return {"scores": np.asarray(scores, np.float64).tolist()}
 
     def _generate(self, obj: Dict) -> Dict:
-        pump = self.pumps["generate"]
         toks = obj.get("tokens")
         if not toks or not isinstance(toks, list):
             raise _BadRequest("'tokens' must be a non-empty list of ids")
         payload = {"tokens": np.asarray(toks, np.int32)}
-        out = self._call(pump, payload, obj)
+        out = self._call("generate", payload, obj)
         return {"tokens": np.asarray(out, np.int64).tolist()}

@@ -66,9 +66,15 @@ def _run_gateway(args):
         name = "score"
 
     server = GatewayServer({name: EnginePump(engine, name)},
-                           host=host or "127.0.0.1", port=int(port)).start()
+                           host=host or "127.0.0.1", port=int(port),
+                           supervise=not args.no_supervise,
+                           snapshot_dir=args.snapshot_dir).start()
+    warm = ""
+    if args.snapshot_dir and getattr(engine, "cache", None) is not None:
+        warm = (" (warm cache restore)" if engine.metrics.counters.get(
+            "snapshot_restores") else " (cold start)")
     print(f"[gateway] {args.engine} engine on {server.url} "
-          f"(/v1/{name}, /healthz, /metrics) — Ctrl-C to drain and stop")
+          f"(/v1/{name}, /healthz, /metrics){warm} — Ctrl-C to drain and stop")
     try:
         while True:
             server._thread.join(3600.0)
@@ -88,6 +94,12 @@ def main(argv=None):
     ap.add_argument("--gateway", default=None, metavar="HOST:PORT",
                     help="serve over the repro.gateway RPC front-end "
                          "instead of running a local loop")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="gateway mode: save the GRASP cache state here on "
+                         "drain and warm-restore it on startup")
+    ap.add_argument("--no-supervise", action="store_true",
+                    help="gateway mode: disable the pump supervisor "
+                         "(dead pump threads then stay dead)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)

@@ -8,7 +8,12 @@ shed load), ``metrics`` (hit/latency accounting + JSON snapshots) and
 directory for the architecture; ``repro.gateway`` puts these engines
 behind a thread-pumped RPC front-end.
 """
-from repro.serve.cache import CacheConfig, EmbeddingCache, LookupStats
+from repro.serve.cache import (
+    CacheConfig,
+    EmbeddingCache,
+    LookupStats,
+    SnapshotError,
+)
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
 from repro.serve.scheduler import (
     ContinuousBatcher,
@@ -21,6 +26,7 @@ __all__ = [
     "CacheConfig",
     "EmbeddingCache",
     "LookupStats",
+    "SnapshotError",
     "LatencyHistogram",
     "ServeMetrics",
     "ContinuousBatcher",

@@ -31,7 +31,10 @@ block, so duplicate ids inside one batch cost one fill.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import json
+import os
+import zlib
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -42,6 +45,13 @@ from repro.core.policies import RRPV_LONG, RRPV_MAX
 from repro.serve.metrics import ServeMetrics
 
 LANE = 128
+
+# bump on any change to the snapshot layout; restore refuses other versions
+SNAPSHOT_VERSION = 1
+
+
+class SnapshotError(ValueError):
+    """Snapshot rejected: wrong version, shape mismatch, or bad checksum."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +280,113 @@ class EmbeddingCache:
             interpret=self.config.interpret,
         )
         return np.asarray(rows)[: len(ids), : self.dim][hot_mask]
+
+    # -- warm-restart snapshots ----------------------------------------
+    def _snapshot_checksum(self, geometry: Dict, state: Dict) -> int:
+        """crc32 over the canonical byte serialization of the snapshot
+        payload — cheap, and plenty to catch truncated/garbled files."""
+        blob = json.dumps({"geometry": geometry, "state": state},
+                          sort_keys=True).encode()
+        return zlib.crc32(blob) & 0xFFFFFFFF
+
+    def snapshot(self) -> Dict:
+        """Serialize the cache's *learned* state: which rows are resident
+        where, and the recency/RRPV metadata that took a whole request
+        stream to converge. Row data is NOT serialized — the backing table
+        is the source of truth, so restore re-gathers resident rows from
+        it (one batched fill) and the hot region rebuilds from the table
+        prefix. Version-stamped and checksummed; restore validates both.
+        """
+        geometry = {
+            "num_rows": self.num_rows,
+            "dim": self.dim,
+            "hot_size": self.hot_size,
+            "cold_slots": self.cold_slots,
+            "policy": self.config.policy,
+        }
+        state = {
+            "slot_id": self._slot_id.tolist(),
+            "slot_rrpv": self._slot_rrpv.tolist(),
+            "slot_ts": self._slot_ts.tolist(),
+            "clock": int(self._clock),
+        }
+        return {
+            "version": SNAPSHOT_VERSION,
+            "geometry": geometry,
+            "state": state,
+            "checksum": self._snapshot_checksum(geometry, state),
+        }
+
+    def restore(self, snap: Dict) -> None:
+        """Rebuild hot-set/cold-region state from ``snapshot()`` output.
+
+        Raises ``SnapshotError`` on version/geometry/checksum mismatch —
+        a stale or corrupt snapshot must fall back to a cold start, never
+        poison a running cache with inconsistent metadata.
+        """
+        if not isinstance(snap, dict) or snap.get("version") != SNAPSHOT_VERSION:
+            raise SnapshotError(
+                f"snapshot version {snap.get('version') if isinstance(snap, dict) else snap!r} "
+                f"!= {SNAPSHOT_VERSION}")
+        geometry, state = snap.get("geometry", {}), snap.get("state", {})
+        if snap.get("checksum") != self._snapshot_checksum(geometry, state):
+            raise SnapshotError("snapshot checksum mismatch (corrupt file?)")
+        want = {"num_rows": self.num_rows, "dim": self.dim,
+                "hot_size": self.hot_size, "cold_slots": self.cold_slots,
+                "policy": self.config.policy}
+        if geometry != want:
+            raise SnapshotError(f"snapshot geometry {geometry} != cache {want}")
+        slot_id = np.asarray(state["slot_id"], np.int64)
+        slot_rrpv = np.asarray(state["slot_rrpv"], np.int64)
+        slot_ts = np.asarray(state["slot_ts"], np.int64)
+        if not (slot_id.shape == slot_rrpv.shape == slot_ts.shape
+                == (self.cold_slots,)):
+            raise SnapshotError("snapshot state arrays have the wrong shape")
+        resident = slot_id >= 0
+        ids = slot_id[resident]
+        if ids.size and (ids.min() < self.hot_size
+                         or ids.max() >= self.num_rows
+                         or np.unique(ids).size != ids.size):
+            raise SnapshotError("snapshot resident ids out of range/duplicated")
+        self._slot_id = slot_id
+        self._slot_rrpv = slot_rrpv
+        self._slot_ts = slot_ts
+        self._clock = int(state["clock"])
+        self._id_slot = np.full(self.num_rows, -1, np.int64)
+        self._id_slot[ids] = np.flatnonzero(resident)
+        # warm fill: one batched gather from the backing table re-creates
+        # the resident cold rows (row data is never part of the snapshot)
+        if ids.size:
+            rows = jnp.asarray(self.table[ids])
+            self._cold_rows = self._cold_rows.at[np.flatnonzero(resident)].set(rows)
+        self.metrics.count("snapshot_restores")
+        self.metrics.gauge("restored_resident", int(ids.size))
+
+    def save_snapshot(self, path: str) -> Dict:
+        """``snapshot()`` to a JSON file (atomic rename — a crash mid-write
+        leaves the previous snapshot intact, not a torn file)."""
+        snap = self.snapshot()
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(snap, f)
+        os.replace(tmp, path)
+        return snap
+
+    def load_snapshot(self, path: str) -> bool:
+        """Restore from ``path`` if it exists and validates; returns True on
+        a warm start, False on a (silent) cold start when the file is
+        missing. Everything else — a torn/unparseable file included —
+        raises ``SnapshotError``, and the caller decides whether a corrupt
+        snapshot is fatal or just a cold start."""
+        if not os.path.exists(path):
+            return False
+        try:
+            with open(path) as f:
+                snap = json.load(f)
+        except (OSError, ValueError) as e:   # JSONDecodeError is a ValueError
+            raise SnapshotError(f"unreadable snapshot {path}: {e}") from e
+        self.restore(snap)
+        return True
 
     # ------------------------------------------------------------------
     def check_consistency(self) -> None:

@@ -165,14 +165,24 @@ class ContinuousBatcher:
         return batch
 
     def complete(self, batch: List[Request], results: List[Any]) -> None:
-        """Attach results and record service/e2e latency for the batch."""
+        """Attach results and record service/e2e latency for the batch.
+
+        Requests already at a terminal status are skipped: a supervisor may
+        have failed out a wedged batch while its (stuck) forward was still
+        running — when that forward finally returns, its completion must
+        not overwrite the terminal outcome callers already saw.
+        """
         now = self.clock()
+        fresh: List[Request] = []
         with self._lock:
             for r, res in zip(batch, results):
+                if r.status in Request.TERMINAL:
+                    continue
                 r.status = "done"
                 r.finished = now
                 r.result = res
-        for r in batch:
+                fresh.append(r)
+        for r in fresh:
             r.done.set()
             self.metrics.count("completed")
             self.metrics.observe("service", now - (r.started or now))
@@ -180,13 +190,28 @@ class ContinuousBatcher:
 
     def fail(self, batch: List[Request], exc: BaseException) -> None:
         """Resolve a claimed batch whose forward raised: callers must never
-        hang on a crashed batch, they get a typed error instead."""
+        hang on a crashed batch, they get a typed error instead. Idempotent
+        per request (terminal statuses are left untouched)."""
         now = self.clock()
+        fresh: List[Request] = []
         with self._lock:
             for r in batch:
+                if r.status in Request.TERMINAL:
+                    continue
                 r.status = "failed"
                 r.finished = now
                 r.error = exc
-        for r in batch:
+                fresh.append(r)
+        for r in fresh:
             r.done.set()
             self.metrics.count("failed")
+
+    def fail_all(self, exc: BaseException) -> List[Request]:
+        """Fail every *queued* (unclaimed) request in one step — the
+        shutdown last resort for when the claim path itself is broken
+        (a ``next_batch`` that raises): callers must unblock even when
+        batching can't run. Returns the requests that were failed out."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        self.fail(pending, exc)
+        return pending
