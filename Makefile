@@ -1,4 +1,4 @@
-.PHONY: test quick slow verify serve-smoke gateway-smoke chaos-smoke gateway
+.PHONY: test quick slow verify serve-smoke gateway-smoke chaos-smoke perf-smoke gateway
 
 # full tier-1 suite (same command ROADMAP.md documents)
 test:
@@ -34,6 +34,14 @@ gateway-smoke:
 # BENCH_chaos.json
 chaos-smoke:
 	PYTHONPATH=src python -m benchmarks.chaos_smoke --out BENCH_chaos.json
+
+# tracked perf baseline (non-tier-1): vectorized cache lookup rows/s vs the
+# retained reference loop (>=3x floor at batch 256 / zipf 1.1, bit-identical
+# outputs + counters), pipelined vs sequential GRASP dist step (bit-exact
+# loss+params on the 8-device mesh), and the hot_gather kernel microbench;
+# emits BENCH_perf.json
+perf-smoke:
+	PYTHONPATH=src python -m benchmarks.perf_smoke --out BENCH_perf.json
 
 # launch the gateway for manual poking (recsys engine on :8077):
 #   curl -s -XPOST localhost:8077/v1/score -d '{"hist":[1,2,3],"candidates":[4,5]}'

@@ -10,6 +10,11 @@ python -m pytest -q -m "not slow"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python tests/helpers/grasp_gnn_equivalence.py
 
+# 8-device bit-exactness of the pipelined (overlap=True) GRASP step vs the
+# sequential exchange: identical loss AND params over multiple layers/steps
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python tests/helpers/grasp_pipeline_equivalence.py
+
 # non-tier-1: serving subsystem end-to-end smoke (GRASP cache vs unpinned
 # baselines + shed-load p99 bound); emits BENCH_serve.json
 PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
@@ -24,5 +29,10 @@ PYTHONPATH=src timeout 600 python -m benchmarks.gateway_smoke --out BENCH_gatewa
 # 500-tail bound, same-seed determinism, warm-restart snapshot recovery);
 # bounded wall-clock, emits BENCH_chaos.json
 PYTHONPATH=src timeout 600 python -m benchmarks.chaos_smoke --out BENCH_chaos.json
+
+# non-tier-1: tracked perf baseline (vectorized lookup >=3x the retained
+# reference loop with bit-identical outputs/counters, pipelined dist step
+# bit-exact vs sequential, hot_gather microbench); emits BENCH_perf.json
+PYTHONPATH=src timeout 600 python -m benchmarks.perf_smoke --out BENCH_perf.json
 
 echo "verify: OK"

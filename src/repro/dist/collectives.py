@@ -174,7 +174,8 @@ def grasp_partition(g, spec: GraspPartitionSpec) -> Dict[str, np.ndarray]:
 
 
 def make_grasp_gin_step(spec: GraspPartitionSpec, cfg, d_feat: int,
-                        n_classes: int, mesh, opt_update) -> Tuple:
+                        n_classes: int, mesh, opt_update,
+                        overlap: bool = True) -> Tuple:
     """A shard_map GIN train step over a GRASP-partitioned graph.
 
     Batch dict (leading dim of sharded entries = device blocks):
@@ -189,6 +190,17 @@ def make_grasp_gin_step(spec: GraspPartitionSpec, cfg, d_feat: int,
     matching the unpartitioned `gin_apply` loss (same per-destination edge
     order, f32 compute). `batch_specs` maps batch keys to spec-entry tuples
     for `sharding.ns`.
+
+    `overlap=True` (the default) runs the software-pipelined exchange:
+    gather tables are double-buffered across layers, layer l+1's hot and
+    halo rows travel in ONE fused all_gather issued the moment h_{l+1}
+    exists (a full layer of aggregation/MLP compute before the first
+    consumer), and layer 0's hot table is `x_hot` itself — it is already
+    replicated, so gathering own slices would only reassemble it. Every
+    transformation is pure data movement, so loss and params are
+    bit-identical to the `overlap=False` sequential step (collective
+    count per step drops from 2L to L). `overlap=False` is the escape
+    hatch that keeps the original gather-per-region schedule.
     """
     if cfg.kind != "gin":
         raise ValueError(f"grasp exchange step only supports gin, got {cfg.kind!r}")
@@ -197,6 +209,23 @@ def make_grasp_gin_step(spec: GraspPartitionSpec, cfg, d_feat: int,
                          f"{spec.num_devices}")
     axes = tuple(mesh.axis_names)
     hot, hpd, cpd = spec.hot, spec.hot_per_dev, spec.cold_per_dev
+    P = spec.num_devices
+
+    def fused_exchange(h, pub_local):
+        """Double-buffer swap: one all_gather of [own hot slice | published
+        cold rows] refreshes both the hot table and the halo for the NEXT
+        layer. Issued right after h is produced and consumed a whole layer
+        of compute later — the window XLA's latency-hiding scheduler can
+        fill on real hardware."""
+        d = h.shape[1]
+        if spec.c_pub == 0:
+            return jax.lax.all_gather(h[:hpd], axes, axis=0, tiled=True), None
+        buf = jnp.concatenate([h[:hpd], jnp.take(h[hpd:], pub_local, axis=0)],
+                              axis=0)
+        g = jax.lax.all_gather(buf, axes, axis=0, tiled=True)
+        g = g.reshape(P, hpd + spec.c_pub, d)
+        return (g[:, :hpd].reshape(P * hpd, d),
+                g[:, hpd:].reshape(P * spec.c_pub, d))
 
     def local_loss(params, x_hot, x_cold, esrc, edst, emask, pub, labels,
                    p_idx):
@@ -207,14 +236,28 @@ def make_grasp_gin_step(spec: GraspPartitionSpec, cfg, d_feat: int,
         # cold slice (empty slots clip to row 0, which no edge addresses
         # through the halo)
         pub_local = jnp.clip(pub - (hot + p_idx * cpd), 0, max(cpd - 1, 0))
-        for lp in params["layers"]:
-            own_cold = h[hpd:]
-            parts = [jax.lax.all_gather(h[:hpd], axes, axis=0, tiled=True),
-                     own_cold]
+        layers = params["layers"]
+        if overlap:
+            # prologue: only the halo needs a collective before layer 0
+            hot_full = x_hot
+            halo = None
             if spec.c_pub > 0:
-                published = jnp.take(own_cold, pub_local, axis=0)
-                parts.append(jax.lax.all_gather(published, axes, axis=0,
-                                                tiled=True))
+                halo = jax.lax.all_gather(
+                    jnp.take(x_cold, pub_local, axis=0), axes, axis=0,
+                    tiled=True)
+        for li, lp in enumerate(layers):
+            own_cold = h[hpd:]
+            if overlap:
+                parts = [hot_full, own_cold]
+                if spec.c_pub > 0:
+                    parts.append(halo)
+            else:
+                parts = [jax.lax.all_gather(h[:hpd], axes, axis=0, tiled=True),
+                         own_cold]
+                if spec.c_pub > 0:
+                    published = jnp.take(own_cold, pub_local, axis=0)
+                    parts.append(jax.lax.all_gather(published, axes, axis=0,
+                                                    tiled=True))
             table = jnp.concatenate(parts, axis=0)
             msg = jnp.take(table, esrc, axis=0)
             msg = jnp.where(emask[:, None], msg, 0.0)
@@ -222,6 +265,8 @@ def make_grasp_gin_step(spec: GraspPartitionSpec, cfg, d_feat: int,
             eps = lp["eps"] if lp["eps"] is not None else 0.0
             h = gnn_mod._mlp(lp["mlp"], (1.0 + eps) * h + agg)
             h = jax.nn.relu(L.layernorm(lp["ln"], h))
+            if overlap and li + 1 < len(layers):
+                hot_full, halo = fused_exchange(h, pub_local)
         logits = L.dense(params["out"], h, jnp.float32)
         logp = jax.nn.log_softmax(logits, axis=-1)
         ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]

@@ -15,6 +15,7 @@ from repro.serve.cache import (
     SnapshotError,
 )
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.refcache import ReferenceEmbeddingCache
 from repro.serve.scheduler import (
     ContinuousBatcher,
     Request,
@@ -26,6 +27,7 @@ __all__ = [
     "CacheConfig",
     "EmbeddingCache",
     "LookupStats",
+    "ReferenceEmbeddingCache",
     "SnapshotError",
     "LatencyHistogram",
     "ServeMetrics",

@@ -27,6 +27,18 @@ Metadata (slot maps, RRPV counters) lives on the host; row data lives in
 device arrays. ``lookup`` is batched: unique cold misses are fetched from
 the backing table once (the "HBM gather") and scattered into the cold
 block, so duplicate ids inside one batch cost one fill.
+
+The lookup hot path is fully vectorized. Victim selection for a batch of
+k misses exploits that RRPV aging adds the *same* delta to every slot, so
+relative order never changes: in "deficit" keys (``RRPV_MAX - rrpv``) the
+sequential evict loop is exactly repeated extract-min (first index on
+ties) with re-insertion at ``min + 1``, which a short per-level loop
+computes without per-miss Python. LRU victims are a stable argsort of the
+timestamps. Both reproduce the retained reference loop implementation
+(``serve.refcache``) bit-for-bit — outputs, counters, and metadata —
+which the perf bench and the randomized equivalence tests assert. A host
+mirror of the cold block (and the backing table itself for the hot
+region's no-kernel path) keeps batch assembly free of device→host copies.
 """
 from __future__ import annotations
 
@@ -141,6 +153,14 @@ class EmbeddingCache:
             self._hot_block = None
         self._cold_rows = jnp.zeros((max(self.cold_slots, 1), self.dim),
                                     jnp.float32)
+        # host mirror of the cold block: batch assembly reads this instead
+        # of round-tripping the whole device cold region per lookup. The
+        # device copy is refreshed lazily (one fused transfer) via
+        # ``cold_rows_device`` — eager per-fill scatters would recompile
+        # for every distinct fill-count shape
+        self._cold_rows_host = np.zeros((max(self.cold_slots, 1), self.dim),
+                                        np.float32)
+        self._cold_rows_dirty = False
 
         # --- host-side cold-region metadata ---------------------------
         cs = self.cold_slots
@@ -149,6 +169,7 @@ class EmbeddingCache:
         self._slot_ts = np.zeros(cs, np.int64)           # LRU timestamps
         self._id_slot = np.full(self.num_rows, -1, np.int64)
         self._clock = 0
+        self._resident = 0               # occupied cold slots, incremental
 
     # ------------------------------------------------------------------
     @property
@@ -195,6 +216,109 @@ class EmbeddingCache:
             self._slot_rrpv += RRPV_MAX - mx  # age the whole region
         return int(np.argmax(self._slot_rrpv))
 
+    def _insert_one(self, rid: int) -> int:
+        """Sequential insert (the reference semantics; used when a GraspPlan
+        steers per-id insertion RRPVs, where victim choice depends on the
+        id stream order and cannot be batched)."""
+        v = self._evict_one()
+        old = self._slot_id[v]
+        if old >= 0:
+            self._id_slot[old] = -1
+        else:
+            self._resident += 1
+        self._slot_id[v] = rid
+        self._id_slot[rid] = v
+        self._slot_rrpv[v] = self._insert_rrpv(int(rid))
+        self._slot_ts[v] = self._clock
+        return v
+
+    # --- batched victim selection (bit-equal to the _evict_one loop) ---
+    def _select_victims_rrpv(self, k: int) -> np.ndarray:
+        """k RRPV victims in eviction order, without per-miss Python.
+
+        Aging adds one uniform delta to every slot, so relative order is
+        invariant: in absolute "deficit" keys (RRPV_MAX - rrpv, plus total
+        aging so far) the sequential loop is exactly: repeatedly take the
+        minimum key (first index on ties), re-inserting the victim at
+        min + 1 (SRRIP insertion, one step from eviction). All slots tied
+        at the current minimum are consumed in index order before the
+        level rises, so one numpy step per *level* — not per miss —
+        replays the loop exactly, re-evictions of same-batch fills
+        included.
+        """
+        cur = (RRPV_MAX - self._slot_rrpv).astype(np.int64)  # absolute keys
+        victims = np.empty(k, np.int64)
+        got, level = 0, np.int64(0)
+        while got < k:
+            level = cur.min()
+            cand = np.flatnonzero(cur == level)
+            t = min(cand.size, k - got)
+            victims[got:got + t] = cand[:t]
+            cur[cand[:t]] = level + 1
+            got += t
+        # fold the accumulated aging back into stored RRPVs: final deficit
+        # of every slot is its key minus the last extraction level
+        self._slot_rrpv[:] = RRPV_MAX - (cur - level)
+        return victims
+
+    def _select_victims_lru(self, k: int) -> np.ndarray:
+        """k LRU victims in eviction order: slots not touched this lookup,
+        oldest first (stable sort = argmin's first-index tie-break). Once
+        every slot carries the current clock, argmin degenerates to slot 0
+        — same as the sequential loop."""
+        order = np.argsort(self._slot_ts, kind="stable")
+        stale = order[self._slot_ts[order] < self._clock]
+        # beyond the stale set every slot holds the current clock, where
+        # argmin (= the sequential victim) is always slot 0 — the zeros
+        t = min(stale.size, k)
+        victims = np.zeros(k, np.int64)
+        victims[:t] = stale[:t]
+        return victims
+
+    def _apply_inserts(self, victims: np.ndarray, rids: np.ndarray) -> None:
+        """Batched metadata update for inserting rids[i] -> victims[i] in
+        order. When a slot repeats within the batch (more misses than the
+        eviction dynamics keep resident), the LAST rid wins and every
+        earlier same-batch rid ends displaced — exactly the sequential
+        outcome."""
+        k = victims.size
+        uniq_slots, rev_idx = np.unique(victims[::-1], return_index=True)
+        last_idx = k - 1 - rev_idx           # last occurrence of each slot
+        old = self._slot_id[uniq_slots]
+        self._resident += int((old < 0).sum())
+        self._id_slot[old[old >= 0]] = -1    # pre-batch occupants out
+        displaced = np.ones(k, bool)
+        displaced[last_idx] = False
+        self._id_slot[rids[displaced]] = -1  # same-batch displaced stay out
+        winners = rids[last_idx]
+        self._slot_id[uniq_slots] = winners
+        self._id_slot[winners] = uniq_slots
+        if self.config.policy == "lru":
+            # rrpv aging/insertion already folded in by _select_victims_rrpv
+            # on the rrpv path; LRU only stamps the insertion value
+            self._slot_rrpv[victims] = RRPV_LONG
+        self._slot_ts[victims] = self._clock
+
+    def _fill_rows(self, victims: np.ndarray, rids: np.ndarray) -> None:
+        """One batched backing-store gather into the host mirror for a
+        batch of fills; re-used slots keep only their final occupant's
+        row. The device copy is invalidated, not written — lookup serves
+        from the mirror, so the device block is only materialized when a
+        device consumer asks for it."""
+        k = victims.size
+        uniq_slots, rev_idx = np.unique(victims[::-1], return_index=True)
+        winners = rids[k - 1 - rev_idx]
+        self._cold_rows_host[uniq_slots] = self.table[winners]
+        self._cold_rows_dirty = True
+
+    def cold_rows_device(self) -> jnp.ndarray:
+        """The cold block as a device array, refreshed from the host
+        mirror in one fused update when fills have made it stale."""
+        if self._cold_rows_dirty:
+            self._cold_rows = jnp.asarray(self._cold_rows_host)
+            self._cold_rows_dirty = False
+        return self._cold_rows
+
     # ------------------------------------------------------------------
     def lookup(self, ids) -> Tuple[jnp.ndarray, LookupStats]:
         """Batched read: (B,) int ids -> ((B, d) float32, LookupStats).
@@ -203,41 +327,42 @@ class EmbeddingCache:
         rows are read from, never their values.
         """
         ids = np.asarray(ids, np.int64).reshape(-1)
-        if ids.size and (ids.min() < 0 or ids.max() >= self.num_rows):
-            raise IndexError("id out of range")
         b = ids.shape[0]
+        if b == 0:
+            # empty batch: no clock tick, no metadata churn — just an
+            # all-zero LookupStats and the gauges
+            return self._finish(np.zeros((0, self.dim), np.float32),
+                                LookupStats())
+        if ids.min() < 0 or ids.max() >= self.num_rows:
+            raise IndexError("id out of range")
         self._clock += 1
         hot_mask = ids < self.hot_size
         hot_hits = int(hot_mask.sum())
 
         cold_ids = ids[~hot_mask]
         uniq = np.unique(cold_ids)
-        fill_ids, fill_slots = [], []
-        bypassed_uniq = []
+        n_fill = 0
         if uniq.size:
             resident = self._id_slot[uniq] >= 0
             hit_slots = self._id_slot[uniq[resident]]
             if hit_slots.size:
                 self._promote(hit_slots)
-            for rid in uniq[~resident]:
-                if self.cold_slots == 0:
-                    bypassed_uniq.append(rid)
-                    continue
-                v = self._evict_one()
-                old = self._slot_id[v]
-                if old >= 0:
-                    self._id_slot[old] = -1
-                self._slot_id[v] = rid
-                self._id_slot[rid] = v
-                self._slot_rrpv[v] = self._insert_rrpv(int(rid))
-                self._slot_ts[v] = self._clock
-                fill_ids.append(rid)
-                fill_slots.append(v)
-        if fill_ids:
-            rows = jnp.asarray(self.table[np.asarray(fill_ids)])
-            self._cold_rows = self._cold_rows.at[np.asarray(fill_slots)].set(rows)
+            miss_ids = uniq[~resident]
+            if miss_ids.size and self.cold_slots > 0:
+                n_fill = int(miss_ids.size)
+                if self.plan is None:
+                    if self.config.policy == "lru":
+                        victims = self._select_victims_lru(n_fill)
+                    else:
+                        victims = self._select_victims_rrpv(n_fill)
+                    self._apply_inserts(victims, miss_ids)
+                else:
+                    victims = np.fromiter(
+                        (self._insert_one(int(r)) for r in miss_ids),
+                        np.int64, n_fill)
+                self._fill_rows(victims, miss_ids)
 
-        # --- assemble the batch ---------------------------------------
+        # --- assemble the batch (host-only reads) ---------------------
         out = np.zeros((b, self.dim), np.float32)
         if self.hot_size > 0 and hot_hits:
             out[hot_mask] = self._gather_hot(ids, hot_mask)
@@ -245,30 +370,34 @@ class EmbeddingCache:
         slots = np.where(cold_mask, self._id_slot[ids], -1)
         served = cold_mask & (slots >= 0)
         if served.any():
-            out[served] = np.asarray(self._cold_rows)[slots[served]]
+            out[served] = self._cold_rows_host[slots[served]]
         byp = cold_mask & (slots < 0)
         if byp.any():
             out[byp] = self.table[ids[byp]]
 
         byp_refs = int(byp.sum())
-        misses = len(fill_ids) + byp_refs
+        misses = n_fill + byp_refs
         cold_hits = int(cold_mask.sum()) - misses
         stats = LookupStats(hot_hits=hot_hits, cold_hits=cold_hits,
                             misses=misses, bypassed=byp_refs)
+        return self._finish(out, stats)
+
+    def _finish(self, out: np.ndarray, stats: LookupStats):
         m = self.metrics
         m.count("hot_hits", stats.hot_hits)
         m.count("cold_hits", stats.cold_hits)
         m.count("misses", stats.misses)
         m.count("bypassed", stats.bypassed)
         m.gauge("pin_ratio", self.pin_ratio)
-        m.gauge("cold_resident", int((self._slot_id >= 0).sum()))
+        m.gauge("cold_resident", self._resident)
         return jnp.asarray(out), stats
 
     def _gather_hot(self, ids: np.ndarray, hot_mask: np.ndarray) -> np.ndarray:
         """Read the hot references of a batch from the pinned block."""
         if not self.config.use_kernel:
-            hit_ids = ids[hot_mask]
-            return np.asarray(self._hot_block)[hit_ids, : self.dim]
+            # the backing table IS the hot block (unpadded): a pure host
+            # gather, no device→host copy of the pinned region
+            return self.table[ids[hot_mask]]
         from repro.kernels.hot_gather.hot_gather import hot_gather_hot_part
 
         tile = self.config.tile_e
@@ -354,11 +483,13 @@ class EmbeddingCache:
         self._clock = int(state["clock"])
         self._id_slot = np.full(self.num_rows, -1, np.int64)
         self._id_slot[ids] = np.flatnonzero(resident)
+        self._resident = int(ids.size)
         # warm fill: one batched gather from the backing table re-creates
         # the resident cold rows (row data is never part of the snapshot)
         if ids.size:
-            rows = jnp.asarray(self.table[ids])
-            self._cold_rows = self._cold_rows.at[np.flatnonzero(resident)].set(rows)
+            self._cold_rows_host[np.flatnonzero(resident)] = self.table[ids]
+            self._cold_rows_dirty = True
+            self.cold_rows_device()   # eager: restore is once-per-restart
         self.metrics.count("snapshot_restores")
         self.metrics.gauge("restored_resident", int(ids.size))
 
@@ -393,6 +524,7 @@ class EmbeddingCache:
         """Invariants the eviction tests lean on (cheap; host metadata only)."""
         res = self._slot_id >= 0
         assert int(res.sum()) <= self.cold_slots
+        assert self._resident == int(res.sum()), "resident counter drifted"
         ids = self._slot_id[res]
         assert np.unique(ids).size == ids.size, "duplicate id in cold region"
         assert (self._id_slot[ids] == np.flatnonzero(res)).all()

@@ -52,11 +52,82 @@ def test_partition_halo_is_bounded_by_skew():
     assert published <= spec.num_devices * spec.c_pub
 
 
+def test_pipelined_step_matches_sequential_single_device():
+    """The overlap=True (default) pipelined exchange must be bit-exact vs
+    overlap=False. On one device every all_gather is an identity, but the
+    whole pipelined code path (prologue exchange, fused hot+halo buffer,
+    double-buffered feature tables) still executes — the 8-device run is
+    the slow subprocess test below."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base as cfgs
+    from repro.core.reorder import reorder_ranks
+    from repro.dist import collectives as coll
+    from repro.graph import generate
+    from repro.graph.csr import apply_reorder
+    from repro.launch.mesh import make_debug_mesh
+    from repro.nn import gnn as gnn_mod
+    from repro.train import optimizer as opt_mod
+
+    mesh = make_debug_mesh(1, 1)
+    g = generate.rmat(7, 5, seed=4)
+    g = apply_reorder(g, reorder_ranks(g, "dbg"))
+    spec = coll.partition_spec_for(g.num_nodes, g.num_edges, 1, hot=32,
+                                   pub_frac=1.0, edge_slack=3.0)
+    part = coll.grasp_partition(g, spec)
+    assert part["dropped"] == 0
+
+    cfg = cfgs.GNNConfig(name="t1", kind="gin", n_layers=3, d_hidden=8)
+    d_feat, n_classes = 6, 4
+    rng = np.random.default_rng(0)
+    params0 = gnn_mod.init(jax.random.PRNGKey(0), cfg, d_feat=d_feat)
+    opt_init, opt_update = opt_mod.make(opt_mod.OptConfig(lr=1e-3))
+    x = rng.standard_normal((spec.num_nodes, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, spec.num_nodes).astype(np.int32)
+    batch = dict(
+        x_hot=jnp.asarray(x[:spec.hot]),
+        x_cold=jnp.asarray(x[spec.hot:].reshape(1, spec.cold_per_dev, d_feat)),
+        esrc=jnp.asarray(part["esrc"]), edst=jnp.asarray(part["edst"]),
+        emask=jnp.asarray(part["emask"]), pub=jnp.asarray(part["pub"]),
+        labels=jnp.asarray(labels[None, :]))
+
+    results = {}
+    for overlap in (False, True):
+        step, _ = coll.make_grasp_gin_step(spec, cfg, d_feat, n_classes,
+                                           mesh, opt_update, overlap=overlap)
+        p_, o_ = params0, opt_init(params0)
+        losses = []
+        with jax.set_mesh(mesh):
+            jstep = jax.jit(step)
+            for _ in range(3):
+                p_, o_, m = jstep(p_, o_, batch)
+                losses.append(float(m["loss"]))
+        results[overlap] = (losses, p_)
+
+    assert results[False][0] == results[True][0]
+    for a, b in zip(jax.tree_util.tree_leaves(results[False][1]),
+                    jax.tree_util.tree_leaves(results[True][1])):
+        assert bool((a == b).all())
+
+
 @pytest.mark.slow
 def test_grasp_exchange_matches_reference_subprocess():
     """shard_map GRASP exchange == unpartitioned GIN loss, on 8 devices."""
     r = subprocess.run(
         [sys.executable, os.path.join(os.path.dirname(__file__), "helpers", "grasp_gnn_equivalence.py")],
+        env={**os.environ, "PYTHONPATH": SRC},
+        capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+
+
+@pytest.mark.slow
+def test_pipelined_step_bit_exact_subprocess():
+    """Pipelined (overlap=True) == sequential GRASP step: identical loss
+    and params over 3 layers x 5 steps on the 8-device mesh."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), "helpers", "grasp_pipeline_equivalence.py")],
         env={**os.environ, "PYTHONPATH": SRC},
         capture_output=True, text=True, timeout=600,
     )

@@ -9,8 +9,9 @@ import numpy as np
 import pytest
 
 from repro.core import plan as plan_mod
-from repro.serve.cache import CacheConfig, EmbeddingCache
+from repro.serve.cache import CacheConfig, EmbeddingCache, LookupStats
 from repro.serve.metrics import ServeMetrics
+from repro.serve.refcache import ReferenceEmbeddingCache
 from repro.serve.scheduler import (
     ContinuousBatcher,
     SchedulerConfig,
@@ -154,6 +155,76 @@ def test_out_of_range_ids_rejected():
         c.lookup(np.array([N]))
     with pytest.raises(IndexError):
         c.lookup(np.array([-1]))
+
+
+def test_empty_lookup_short_circuits():
+    """Empty id batches return a (0, d) block and zero-count stats without
+    ticking the eviction clock or disturbing residency (ISSUE satellite)."""
+    table = _table()
+    c = _cache(table, rows=32)
+    _ref_check(c, table, np.arange(c.hot_size, c.hot_size + 8))
+    clock, resident = c._clock, c._resident
+    out, st = c.lookup(np.array([], dtype=np.int64))
+    assert np.asarray(out).shape == (0, D)
+    assert st == LookupStats()          # all-zero counts
+    assert st.hit_rate == 0.0
+    assert c._clock == clock and c._resident == resident
+    c.check_consistency()
+    # still works mid-stream: the next real batch is unaffected
+    st2 = _ref_check(c, table, np.arange(c.hot_size, c.hot_size + 8))
+    assert st2.misses == 0
+
+
+def test_vectorized_lookup_matches_reference_loop():
+    """The batched eviction/insert path must be bit-identical to the
+    retained pre-vectorization loop: same rows, same stats, same
+    cold-region metadata, under both policies and heavy thrashing."""
+    table = _table()
+    for policy in ("rrpv", "lru"):
+        for rows, hot_fraction in ((24, 0.25), (32, 0.5), (8, 0.0)):
+            cc = CacheConfig(budget_bytes=rows * ROW, hot_fraction=hot_fraction,
+                             policy=policy, tile_e=128, use_kernel=False)
+            vec = EmbeddingCache(table, cc)
+            ref = ReferenceEmbeddingCache(table, cc)
+            rng = np.random.default_rng(hash((policy, rows)) % 2**31)
+            for bi in range(12):
+                if bi == 5:
+                    ids = np.array([], dtype=np.int64)   # empty mid-stream
+                elif bi % 2:
+                    ids = np.minimum(rng.zipf(1.2, 96) - 1, N - 1)
+                else:
+                    ids = rng.integers(0, N, 96)
+                o_v, s_v = vec.lookup(ids)
+                o_r, s_r = ref.lookup(ids)
+                np.testing.assert_array_equal(np.asarray(o_v), np.asarray(o_r))
+                np.testing.assert_array_equal(np.asarray(o_v),
+                                              table[np.asarray(ids, np.int64)])
+                assert s_v == s_r
+            for attr in ("_slot_id", "_slot_rrpv", "_slot_ts", "_id_slot"):
+                np.testing.assert_array_equal(getattr(vec, attr),
+                                              getattr(ref, attr))
+            assert vec.metrics.counters == ref.metrics.counters
+            assert vec.metrics.hit_rate == ref.metrics.hit_rate
+            vec.check_consistency()
+            ref.check_consistency()
+
+
+def test_resident_counter_tracks_occupancy_incrementally():
+    """cold_resident is now an O(1) counter, not a full-capacity scan: it
+    must equal the true occupancy after fills, evictions, and restore."""
+    table = _table()
+    c = _cache(table, rows=24, hot_fraction=0.25)      # hot 6 + cold 18
+    assert c._resident == 0
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        c.lookup(rng.integers(0, N, 64))
+        assert c._resident == int((c._slot_id >= 0).sum())
+    assert c.metrics.gauges["cold_resident"] == c._resident
+    snap = c.snapshot()
+    c2 = _cache(table, rows=24, hot_fraction=0.25)
+    c2.restore(snap)
+    assert c2._resident == int((c2._slot_id >= 0).sum()) == c._resident
+    c2.check_consistency()
 
 
 # ---------------------------------------------------------------------------
